@@ -1,0 +1,55 @@
+"""Communication accounting: gossip halo exchange vs centralized baselines.
+
+The paper's core claim is decentralization — no server, neighbour-only
+messages.  This bench quantifies per-round wire bytes *per agent* for
+
+(a) the paper's gossip halo exchange: ≤2 U edges + ≤2 W edges to grid
+    neighbours (what core/gossip.py's 4 collective-permutes move),
+(b) a parameter-server sync: every agent uploads its block factors and
+    downloads the *global* consensus view of its row-U and column-W
+    (the [7]-style architecture the paper argues against): the download
+    alone is q× / p× larger than the gossip edges,
+(c) ring all-reduce consensus over each row's U and column's W
+    (2·(g−1)/g · payload per member, g = row/col length),
+
+plus the int8/top-k compressed gossip variants.  Derived column: ICI time
+at 50 GB/s/link and the byte ratios.
+"""
+
+from __future__ import annotations
+
+from repro.core import compress as C
+
+ICI = 50e9
+
+
+def bytes_per_round(m, n, p, q, r, compression="none"):
+    mb, nb = m // p, n // q
+    u_msg, w_msg = mb * r, nb * r
+    # (a) gossip: send+receive 2 U edges and 2 W edges (interior agent)
+    gossip = 2 * (C.message_bytes_n(u_msg, compression)
+                  + C.message_bytes_n(w_msg, compression))
+    # (b) server round-trip: upload own U,W; download the row's global U
+    #     (m·r/p numbers would suffice at consensus, but pre-consensus the
+    #     server must ship all q versions) and the column's global W
+    up = (u_msg + w_msg) * 4
+    down = (q * u_msg + p * w_msg) * 4
+    ps = up + down
+    # (c) ring all-reduce over row (q members, U) and column (p, W)
+    ar = 2 * (q - 1) / q * u_msg * 4 + 2 * (p - 1) / p * w_msg * 4
+    return gossip, ps, ar
+
+
+def main(out=print):
+    r = 64
+    for (m, n, p, q) in [(1 << 20, 1 << 20, 16, 16), (1 << 20, 1 << 20, 64, 64),
+                         (5000, 5000, 5, 5)]:
+        for comp in ("none", "int8", "topk"):
+            g, ps, ar = bytes_per_round(m, n, p, q, r, comp)
+            out(f"gossip_comm_{p}x{q}_{comp},{g/ICI*1e6:.2f},"
+                f"gossip_B={g:.3g};server_B={ps:.3g};ring_allreduce_B={ar:.3g};"
+                f"vs_server={g/ps:.4f};vs_allreduce={g/ar:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+wall-time is meaningless for them; we time the XLA-lowered equivalents
+(ref / flashref paths, which XLA fuses) and report logical FLOP/s, plus the
+kernels' *structural* numbers (VMEM working set, arithmetic intensity) that
+determine TPU behaviour.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.xla import flash_attention_xla
+from repro.kernels.masked_factor_grad.ref import masked_factor_grad_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / iters * 1e6          # us
+
+
+def bench_masked_factor_grad(out=print):
+    f = jax.jit(masked_factor_grad_ref)
+    for (M, N, r) in [(512, 512, 8), (2048, 2048, 16), (4096, 4096, 64)]:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(M, N)), jnp.float32)
+        m = jnp.asarray(rng.random((M, N)) < 0.2, jnp.float32)
+        u = jnp.asarray(rng.normal(size=(M, r)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(N, r)), jnp.float32)
+        us = _time(f, x, m, u, w)
+        flops = 6 * M * N * r                        # 3 matmuls
+        # VMEM working set of the fused Pallas layout (kernel.py): tiles +
+        # resident gW accumulator
+        bm, bn, rp = min(256, M), min(256, N), max(128, r)
+        vmem = (2 * bm * bn + bm * rp + N * rp + bn * rp + bm * rp) * 4
+        out(f"mfg_{M}x{N}_r{r},{us:.0f},gflops={flops/us/1e3:.2f};"
+            f"vmem_kb={vmem//1024};intensity={r}")
+
+
+def bench_flash_attention(out=print):
+    for (B, H, L, D) in [(1, 8, 1024, 128), (1, 8, 4096, 128)]:
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(B, H, L, D)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(B, H, L, D)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(B, H, L, D)), jnp.bfloat16)
+        f = jax.jit(lambda a, b, c: flash_attention_xla(a, b, c, causal=True))
+        us = _time(f, q, k, v)
+        flops = 4 * B * H * L * L * D / 2            # causal half
+        out(f"flash_attn_B{B}H{H}L{L}D{D},{us:.0f},gflops={flops/us/1e3:.2f}")
+
+
+def main(out=print):
+    bench_masked_factor_grad(out)
+    bench_flash_attention(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the
+paper-scale horizons (Exp#5/#6, ML-1M-scale proxy); default finishes in
+minutes on CPU.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    print("name,us_per_call,derived")
+
+    from benchmarks import table2_synthetic
+    table2_synthetic.main(full=full)
+
+    from benchmarks import table3_rmse
+    table3_rmse.main(full=full)
+
+    from benchmarks import kernels_bench
+    kernels_bench.main()
+
+    from benchmarks import gossip_comm
+    gossip_comm.main()
+
+    from benchmarks import roofline_bench
+    roofline_bench.main()
+
+
+if __name__ == "__main__":
+    main()

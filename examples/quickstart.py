@@ -1,0 +1,57 @@
+"""Quickstart: the paper's algorithm end-to-end in ~30s on CPU.
+
+Decomposes a synthetic low-rank matrix into a 4×4 gossip grid, runs the
+parallel wave scheduler (Algorithm 1's structure updates, batched into
+non-overlapping waves), assembles global factors and reports completion
+RMSE on held-out entries.
+
+    PYTHONPATH=src python examples/quickstart.py [--mode sequential|wave|full]
+"""
+
+import argparse
+
+import jax
+
+from repro.config import GossipMCConfig
+from repro.core import assemble, grid as G, sequential, waves
+from repro.core.state import make_problem
+from repro.data import lowrank_problem
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="wave",
+                    choices=["sequential", "wave", "full"])
+    ap.add_argument("--m", type=int, default=400)
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--grid", type=int, nargs=2, default=(4, 4))
+    ap.add_argument("--rank", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = GossipMCConfig(m=args.m, n=args.n, p=args.grid[0], q=args.grid[1],
+                         rank=args.rank)
+    spec = G.GridSpec(cfg.m, cfg.n, cfg.p, cfg.q, cfg.rank)
+    print(f"matrix {cfg.m}x{cfg.n} rank {cfg.rank} -> grid {cfg.p}x{cfg.q} "
+          f"({spec.num_structures} gossip structures), mode={args.mode}")
+
+    ds = lowrank_problem(cfg.m, cfg.n, cfg.rank, density=0.3, seed=0)
+    prob = make_problem(ds.x, ds.train_mask, spec)
+    key = jax.random.PRNGKey(0)
+
+    log = lambda t, c: print(f"  t={t:>8d}  cost={c:.4e}")
+    if args.mode == "sequential":
+        st, _ = sequential.fit(prob, spec, cfg, key, num_iters=40_000,
+                               eval_every=8_000, callback=log)
+    else:
+        st, _ = waves.fit(prob, spec, cfg, key, num_rounds=2_500,
+                          eval_every=500, mode=args.mode, callback=log)
+
+    du, dw = assemble.consensus_error(st.U, st.W)
+    u, w = assemble.assemble(st.U, st.W, spec)
+    rmse = assemble.rmse(u, w, ds.test_rows, ds.test_cols, ds.test_vals)
+    print(f"consensus error: U {du:.2e}  W {dw:.2e}")
+    print(f"held-out completion RMSE: {rmse:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from results/*.jsonl."""
+
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline_bench import load_records  # noqa: E402
+from repro.roofline.analysis import analyze_record  # noqa: E402
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("kB", 1e3)):
+        if abs(x) >= div:
+            return f"{x/div:.2f} {unit}"
+    return f"{x:.0f} B"
+
+
+def main():
+    records = load_records()
+    records.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("### §Dry-run table (per-device, production numerics)\n")
+    print("| arch | shape | mesh | compile | temp/dev | args/dev | "
+          "FLOPs/dev | HLO bytes/dev | wire bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in records:
+        m = r["memory"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{r['compile_s']:.0f}s | {fmt_b(m['temp_bytes'])} | "
+              f"{fmt_b(m['argument_bytes'])} | {r['flops_per_device']:.2e} | "
+              f"{fmt_b(r['bytes_accessed_per_device'])} | "
+              f"{fmt_b(r['collective_bytes_per_device'])} |")
+
+    print("\n### §Roofline table\n")
+    print("| arch | shape | mesh | compute s | memory s | collective s | "
+          "bottleneck | roofline frac | useful FLOPs |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in records:
+        a = analyze_record(r)
+        print(f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+              f"{a['compute_s']:.2e} | {a['memory_s']:.2e} | "
+              f"{a['collective_s']:.2e} | **{a['bottleneck']}** | "
+              f"{a['roofline_fraction']:.3f} | "
+              f"{a.get('useful_flops_ratio', float('nan')):.2f} |")
+
+    try:
+        with open("results/hillclimb.jsonl") as f:
+            rows = [json.loads(l) for l in f if l.strip()]
+        print("\n### §Perf hillclimb measurements\n")
+        print("| cell | variant | temp/dev | compute s | memory s | "
+              "collective s | bottleneck |")
+        print("|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['cell']} | {r['variant']} | {r['temp_gb']:.2f} GB | "
+                  f"{r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+                  f"{r['collective_s']:.2e} | {r['bottleneck']} |")
+    except FileNotFoundError:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""Config system: typed dataclasses + the --arch registry.
+
+Every run (training, serving, dry-run, benchmark) is described by a
+``RunConfig`` assembled from a ``ModelConfig`` (architecture), a
+``ShapeConfig`` (one of the assigned input-shape cells), a ``MeshConfig``
+and a ``TrainConfig``.  ``src/repro/configs/<arch>.py`` modules register a
+``ModelConfig`` per assigned architecture; shapes are global (they are the
+same four cells for every LM arch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0               # routed experts
+    num_experts_per_tok: int = 0       # top-k
+    num_shared_experts: int = 0        # DeepSeek-style always-on experts
+    expert_d_ff: int = 0               # per-expert hidden dim
+    router_aux_loss_coef: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek multi-head latent attention."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0               # 0 = full-rank queries (v2-lite)
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD block parameters."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    # attention variants
+    qkv_bias: bool = False             # qwen1.5
+    logit_softcap: float = 0.0         # gemma2 final-logit softcap
+    attn_softcap: float = 0.0          # gemma2 attention-logit softcap
+    sliding_window: int = 0            # gemma2 local layers
+    local_global_pattern: int = 0      # every k-th layer is global (gemma2: 2)
+    rope_theta: float = 10000.0
+    # norm / mlp
+    mlp_act: str = "silu"              # silu (SwiGLU) | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): one shared attention block applied every k mamba layers
+    shared_attn_every: int = 0
+    # enc-dec (whisper): encoder layers (decoder uses num_layers)
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1500        # whisper frame count after conv stub
+    # vlm: number of prepended patch-embedding positions supplied by the stub
+    num_patch_tokens: int = 0
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    # does full attention make long_500k infeasible?
+    supports_long_context: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6·N·D model-flops)."""
+        from repro.models.api import param_count  # local import, avoids cycle
+
+        return param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.api import active_param_count
+
+        return active_param_count(self)
+
+
+# ---------------------------------------------------------------------------
+# Input-shape cells (assigned shapes; identical set for every LM arch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                          # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mesh / distribution
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    # axis sizes; None -> production defaults from launch.mesh
+    pod: int = 1
+    data: int = 16
+    model: int = 16
+    # sharding strategy knobs
+    fsdp: bool = True                  # shard params over the data axis too
+    grad_sync: str = "allreduce"       # allreduce | gossip (paper technique)
+    gossip_staleness: int = 1          # halo exchange every k steps
+    compression: str = "none"          # none | int8 | topk
+    remat: str = "full"                # none | full | dots_saveable
+
+    @property
+    def num_devices(self) -> int:
+        return self.pod * self.data * self.model
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    optimizer: str = "adamw"           # adamw | sgd | paper_sgd
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatch: int = 0                # 0 = no gradient accumulation
+    seed: int = 0
+    checkpoint_every: int = 200
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    max_grad_norm: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipMCConfig:
+    """The paper's own workload (matrix completion through gossip)."""
+
+    m: int = 500
+    n: int = 500
+    p: int = 4                         # grid rows
+    q: int = 4                         # grid cols
+    rank: int = 5
+    rho: float = 1e3                   # consensus weight (paper Table 1)
+    lam: float = 1e-9                  # regularization λ
+    a: float = 5.0e-4                  # step size γ_t = a / (1 + b t)
+    b: float = 5.0e-7
+    density: float = 0.2               # observed fraction
+    mode: str = "wave"                 # sequential | wave | full
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = MeshConfig()
+    train: TrainConfig = TrainConfig()
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCHS: Sequence[str] = (
+    "internlm2-20b",
+    "granite-34b",
+    "gemma2-2b",
+    "qwen1.5-32b",
+    "mamba2-780m",
+    "internvl2-76b",
+    "zamba2-2.7b",
+    "whisper-large-v3",
+    "granite-moe-3b-a800m",
+    "deepseek-v2-lite-16b",
+)
+
+
+def _module_name(arch: str) -> str:
+    return "repro.configs." + arch.replace("-", "_").replace(".", "_")
+
+
+def get_model_config(arch: str, **overrides: Any) -> ModelConfig:
+    """Load ``src/repro/configs/<arch>.py`` and return its CONFIG."""
+
+    mod = importlib.import_module(_module_name(arch))
+    cfg: ModelConfig = mod.CONFIG
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+
+    mod = importlib.import_module(_module_name(arch))
+    return mod.smoke_config()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells(arch: str) -> list[str]:
+    """The assigned shape cells that are runnable for this arch.
+
+    ``long_500k`` requires sub-quadratic attention; pure full-attention archs
+    skip it (recorded in DESIGN.md §Arch-applicability).
+    """
+
+    cfg = get_model_config(arch)
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,5 @@
+"""One module per assigned architecture (+ the paper's own gossip_mc).
+
+Each module exposes ``CONFIG`` (the exact published configuration) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests).
+"""

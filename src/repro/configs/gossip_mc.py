@@ -1,0 +1,40 @@
+"""The paper's own workload: gossip matrix completion (Table 1 presets)."""
+
+import dataclasses
+
+from repro.config import GossipMCConfig
+
+# Exp#1..#6 from Table 1 (synthetic rank not stated in the paper; r=5 used
+# throughout our reproduction — see EXPERIMENTS.md §Paper-validation).
+EXPERIMENTS = {
+    "exp1": GossipMCConfig(m=500, n=500, p=4, q=4, rank=5,
+                           rho=1e3, lam=1e-9, a=5.0e-4, b=5.0e-7),
+    "exp2": GossipMCConfig(m=500, n=500, p=4, q=5, rank=5,
+                           rho=1e3, lam=1e-9, a=5.0e-4, b=5.0e-7),
+    "exp3": GossipMCConfig(m=500, n=500, p=5, q=5, rank=5,
+                           rho=1e3, lam=1e-9, a=5.0e-4, b=5.0e-7),
+    "exp4": GossipMCConfig(m=504, n=504, p=6, q=6, rank=5,
+                           rho=1e3, lam=1e-9, a=5.0e-4, b=5.0e-7),
+    # Exp#5/#6: the paper's initial costs (6.4e5 for 5000², i.e. only ~4×
+    # the 500² cost) imply the big synthetic matrices are much sparser than
+    # the small ones — we use density ≈ 0.5% so observed-entry counts (and
+    # hence gradient scales, which set SGD stability at the paper's a)
+    # match the reported regime.
+    "exp5": GossipMCConfig(m=5000, n=5000, p=5, q=5, rank=5, density=0.005,
+                           rho=1e3, lam=1e-9, a=5.0e-4, b=5.0e-6),
+    "exp6": GossipMCConfig(m=10000, n=10000, p=5, q=5, rank=5, density=0.005,
+                           rho=1e3, lam=1e-9, a=5.0e-4, b=5.0e-7),
+}
+
+CONFIG = EXPERIMENTS["exp1"]
+
+# production-scale preset for the dry-run/roofline of the paper's technique:
+# the 16×16 single-pod mesh is the agent grid (one block per chip).
+PRODUCTION = GossipMCConfig(
+    m=1 << 20, n=1 << 20, p=64, q=64, rank=64,
+    rho=1e3, lam=1e-9, a=5.0e-4, b=5.0e-7, density=0.01,
+)
+
+
+def smoke_config() -> GossipMCConfig:
+    return dataclasses.replace(CONFIG, m=80, n=80, p=4, q=4, rank=3)

@@ -1,0 +1,28 @@
+"""internvl2-76b — InternViT (stub) + 80L LM backbone
+[arXiv:2404.16821; unverified]."""
+
+import dataclasses
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    head_dim=128,
+    num_patch_tokens=256,          # stub InternViT patch embeddings
+    rope_theta=500_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=3, d_model=128, num_heads=8, num_kv_heads=2,
+        head_dim=16, d_ff=256, vocab_size=512, num_patch_tokens=8,
+        param_dtype="float32",
+    )

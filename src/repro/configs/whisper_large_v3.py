@@ -1,0 +1,31 @@
+"""whisper-large-v3 — enc-dec audio backbone, conv frontend STUB
+[arXiv:2212.04356; unverified]."""
+
+import dataclasses
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    num_layers=32,                 # decoder layers
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    head_dim=64,
+    encoder_layers=32,
+    encoder_seq_len=1500,          # 30s audio after the (stubbed) conv2 frontend
+    qkv_bias=True,
+    mlp_act="gelu",
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=3, d_model=128, num_heads=4, num_kv_heads=4,
+        head_dim=32, d_ff=256, vocab_size=512, encoder_layers=2,
+        encoder_seq_len=30, param_dtype="float32",
+    )

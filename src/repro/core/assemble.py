@@ -1,0 +1,59 @@
+"""Final culmination of block factors into global U, W + evaluation.
+
+After convergence every grid row has reached consensus in U and every
+column in W (paper §2); we combine by averaging across the consensus axis
+(equivalent to taking any single member at exact consensus, robust before
+it).  Completion/RMSE evaluation is blockwise so huge matrices never
+materialize the dense m×n product.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import GridSpec
+
+
+def assemble(U: jax.Array, W: jax.Array, spec: GridSpec) -> tuple[jax.Array, jax.Array]:
+    """(p,q,mb,r), (p,q,nb,r) -> global (m,r), (n,r)."""
+
+    u_rows = jnp.mean(U, axis=1)                 # (p, mb, r) — consensus over cols
+    w_cols = jnp.mean(W, axis=0)                 # (q, nb, r) — consensus over rows
+    return u_rows.reshape(spec.m, spec.r), w_cols.reshape(spec.n, spec.r)
+
+
+def consensus_error(U: jax.Array, W: jax.Array) -> tuple[float, float]:
+    """Max deviation from the per-row (per-col) consensus mean — diagnostics."""
+
+    du = jnp.max(jnp.abs(U - jnp.mean(U, axis=1, keepdims=True)))
+    dw = jnp.max(jnp.abs(W - jnp.mean(W, axis=0, keepdims=True)))
+    return float(du), float(dw)
+
+
+def rmse(
+    u: jax.Array,
+    w: jax.Array,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    batch: int = 1_000_000,
+) -> float:
+    """RMSE of (U Wᵀ)[rows, cols] vs vals, streamed in index batches."""
+
+    rows = jnp.asarray(rows)
+    cols = jnp.asarray(cols)
+    vals = jnp.asarray(vals, jnp.float32)
+
+    @jax.jit
+    def chunk_err(r, c, v):
+        pred = jnp.sum(u[r] * w[c], axis=-1)
+        return jnp.sum((pred - v) ** 2)
+
+    total = 0.0
+    n = rows.shape[0]
+    for s in range(0, n, batch):
+        total += float(chunk_err(rows[s : s + batch], cols[s : s + batch],
+                                 vals[s : s + batch]))
+    return float(np.sqrt(total / n))

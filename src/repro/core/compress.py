@@ -1,0 +1,93 @@
+"""Gossip-message compression (beyond-paper distributed-optimization trick).
+
+Halo messages (block-edge factor matrices) are what crosses ICI links every
+round.  Two standard compressors, both with deterministic decompression so
+the *same* jitted program runs on every device:
+
+* ``int8``  — symmetric per-tensor quantization (4× smaller messages)
+* ``topk``  — magnitude top-k sparsification with **error feedback**
+              (the residual is fed back into the next round's message, which
+              is what keeps consensus unbiased; Stich et al. 2018 style)
+
+Compression is applied to the *message*, never the state, so convergence
+degrades gracefully (tests bound the gap).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    """Error-feedback memory, same pytree structure as the message."""
+
+    residual: jax.Array
+
+
+def init_state(msg_shape, dtype=jnp.float32) -> CompressState:
+    return CompressState(jnp.zeros(msg_shape, dtype))
+
+
+def int8_compress(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("fraction",))
+def topk_mask(x: jax.Array, fraction: float) -> jax.Array:
+    """Keep the top ``fraction`` entries by magnitude (per tensor)."""
+
+    k = max(1, int(fraction * x.size))
+    flat = jnp.abs(x).ravel()
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+def compress_message(
+    x: jax.Array, method: str, state: CompressState | None = None,
+    topk_fraction: float = 0.25,
+) -> tuple[jax.Array, CompressState | None]:
+    """Returns the (decompressed-at-sender) message actually transmitted and
+    the updated error-feedback state.  We model the wire format by
+    round-tripping through the compressor; the roofline accounting in
+    benchmarks charges the compressed byte count."""
+
+    if method == "none":
+        return x, state
+    if state is not None:
+        x = x + state.residual
+    if method == "int8":
+        q, s = int8_compress(x)
+        sent = int8_decompress(q, s)
+    elif method == "topk":
+        sent = topk_mask(x, topk_fraction)
+    else:
+        raise ValueError(f"unknown compression {method!r}")
+    new_state = CompressState(x - sent) if state is not None else None
+    return sent, new_state
+
+
+def message_bytes_n(n: int, method: str, topk_fraction: float = 0.25) -> int:
+    """Wire bytes for an n-element message (roofline accounting)."""
+
+    if method == "none":
+        return n * 4
+    if method == "int8":
+        return n + 4
+    if method == "topk":
+        k = max(1, int(topk_fraction * n))
+        return k * 8  # value + index
+    raise ValueError(method)
+
+
+def message_bytes(x: jax.Array, method: str, topk_fraction: float = 0.25) -> int:
+    return message_bytes_n(x.size, method, topk_fraction)

@@ -1,0 +1,121 @@
+"""Algorithm 1, verbatim: online sequential SGD over random structures.
+
+This is the paper-faithful reference implementation.  One iteration =
+sample one structure uniformly, compute the SGD gradient of its cost
+(with normalization coefficients), update the three touched blocks with
+step size γ_t = a/(1+bt).
+
+The production (parallel) paths live in waves.py / gossip.py; tests verify
+they minimize the same objective to the same floor.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import GossipMCConfig
+from repro.core import grid as G
+from repro.core import objective as obj
+from repro.core.state import Problem, State, Tables, build_tables
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "lam", "a", "b", "use_kernel"))
+def sgd_structure_step(
+    problem: Problem,
+    state: State,
+    tables: Tables,
+    key: jax.Array,
+    *,
+    rho: float,
+    lam: float,
+    a: float,
+    b: float,
+    use_kernel: bool = False,
+) -> State:
+    """One Algorithm-1 iteration (lines 3–4)."""
+
+    s = jax.random.randint(key, (), 0, tables.blocks.shape[0])
+    idx = tables.blocks[s]                      # (3, 2)
+    bi, bj = idx[:, 0], idx[:, 1]
+    x3 = problem.xb[bi, bj]
+    m3 = problem.maskb[bi, bj]
+    u3 = state.U[bi, bj]
+    w3 = state.W[bi, bj]
+    gu3, gw3 = obj.structure_grads(
+        x3, m3, u3, w3,
+        tables.cf[s], tables.cu[s], tables.cw[s],
+        rho=rho, lam=lam, use_kernel=use_kernel,
+    )
+    lr = obj.gamma(state.t.astype(jnp.float32), a, b)
+    U = state.U.at[bi, bj].add(-lr * gu3)
+    W = state.W.at[bi, bj].add(-lr * gw3)
+    return State(U, W, state.t + 1)
+
+
+def run_chunk(
+    problem: Problem,
+    state: State,
+    tables: Tables,
+    key: jax.Array,
+    num_iters: int,
+    cfg: GossipMCConfig,
+    use_kernel: bool = False,
+) -> State:
+    """``num_iters`` Algorithm-1 iterations under one jitted scan."""
+
+    def body(carry, k):
+        return (
+            sgd_structure_step(
+                problem, carry, tables, k,
+                rho=cfg.rho, lam=cfg.lam, a=cfg.a, b=cfg.b,
+                use_kernel=use_kernel,
+            ),
+            None,
+        )
+
+    keys = jax.random.split(key, num_iters)
+    state, _ = jax.lax.scan(body, state, keys)
+    return state
+
+
+def fit(
+    problem: Problem,
+    spec: G.GridSpec,
+    cfg: GossipMCConfig,
+    key: jax.Array,
+    *,
+    num_iters: int,
+    eval_every: int = 0,
+    callback: Callable[[int, float], None] | None = None,
+    state: State | None = None,
+    use_kernel: bool = False,
+) -> tuple[State, list[tuple[int, float]]]:
+    """Run Algorithm 1 for ``num_iters`` iterations, logging the paper's
+    Table-2 cost every ``eval_every`` iterations."""
+
+    from repro.core.state import init_state
+
+    structures = G.enumerate_structures(spec.p, spec.q)
+    tables = build_tables(spec.p, spec.q, structures)
+    if state is None:
+        key, ik = jax.random.split(key)
+        state = init_state(ik, spec)
+    history: list[tuple[int, float]] = []
+    eval_every = eval_every or num_iters
+    done = 0
+    while done < num_iters:
+        chunk = min(eval_every, num_iters - done)
+        key, ck = jax.random.split(key)
+        state = run_chunk(problem, state, tables, ck, chunk, cfg, use_kernel)
+        done += chunk
+        cost = float(
+            obj.total_report_cost(problem.xb, problem.maskb, state.U, state.W, cfg.lam)
+        )
+        history.append((done, cost))
+        if callback:
+            callback(done, cost)
+    return state, history

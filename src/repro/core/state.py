@@ -1,0 +1,81 @@
+"""Gossip-MC problem + state containers (pytrees)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grid as G
+
+
+class Problem(NamedTuple):
+    """Blockified matrix-completion problem (static data)."""
+
+    xb: jax.Array     # (p, q, mb, nb)
+    maskb: jax.Array  # (p, q, mb, nb)
+
+
+class State(NamedTuple):
+    """Learnable state of the gossip grid."""
+
+    U: jax.Array      # (p, q, mb, r)
+    W: jax.Array      # (p, q, nb, r)
+    t: jax.Array      # scalar int32 — structure-update count (paper's t)
+
+
+class Tables(NamedTuple):
+    """Baked per-structure lookup tables (device constants).
+
+    blocks:  (S, 3, 2) int32 — (pivot, vert, horiz) block coords
+    cf:      (S, 3) f32      — f normalization coefficients of the 3 blocks
+    cu:      (S, 2) f32      — U-pair coef for (pivot, horiz) sides
+    cw:      (S, 2) f32      — W-pair coef for (pivot, vert) sides
+    """
+
+    blocks: jax.Array
+    cf: jax.Array
+    cu: jax.Array
+    cw: jax.Array
+
+
+def build_tables(p: int, q: int, structures: np.ndarray) -> Tables:
+    coefs = G.normalization_coefficients(p, q)
+    blocks = np.zeros((len(structures), 3, 2), np.int32)
+    cf = np.zeros((len(structures), 3), np.float32)
+    cu = np.zeros((len(structures), 2), np.float32)
+    cw = np.zeros((len(structures), 2), np.float32)
+    for s, (kind, i, j) in enumerate(structures):
+        trio = G.structure_blocks(int(kind), int(i), int(j))
+        blocks[s] = trio
+        for b3, (bi, bj) in enumerate(trio):
+            cf[s, b3] = coefs["f"][bi, bj]
+        pivot, vert, horiz = trio
+        # U-pair is the horizontal pair between pivot and horiz
+        pj = min(pivot[1], horiz[1])
+        cu[s, :] = coefs["dU"][pivot[0], pj]
+        # W-pair is the vertical pair between pivot and vert
+        pi = min(pivot[0], vert[0])
+        cw[s, :] = coefs["dW"][pi, vert[1]]
+    return Tables(
+        jnp.asarray(blocks), jnp.asarray(cf), jnp.asarray(cu), jnp.asarray(cw)
+    )
+
+
+def init_state(key: jax.Array, spec: G.GridSpec, scale: float = 1.0) -> State:
+    """Random init (paper: 'initialized randomly').
+
+    Entries ~ N(0, scale²/r) so that (U Wᵀ) entries start O(scale²)."""
+
+    ku, kw = jax.random.split(key)
+    sd = scale / np.sqrt(spec.r)
+    U = sd * jax.random.normal(ku, (spec.p, spec.q, spec.mb, spec.r), jnp.float32)
+    W = sd * jax.random.normal(kw, (spec.p, spec.q, spec.nb, spec.r), jnp.float32)
+    return State(U, W, jnp.zeros((), jnp.int32))
+
+
+def make_problem(x: np.ndarray, mask: np.ndarray, spec: G.GridSpec) -> Problem:
+    xb, mb = G.blockify(x * mask, mask, spec)
+    return Problem(jnp.asarray(xb, jnp.float32), jnp.asarray(mb, jnp.float32))

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    lowrank_problem,
+    movielens_proxy,
+    LMTokenPipeline,
+)
+
+__all__ = ["lowrank_problem", "movielens_proxy", "LMTokenPipeline"]

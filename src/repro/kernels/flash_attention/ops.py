@@ -1,0 +1,77 @@
+"""Public jitted wrapper for the flash attention kernel.
+
+Handles (B, H) flattening, GQA group derivation, padding Lq to bq / Lk to
+bk / D to 128 (padded keys are masked inside the kernel via ``lk_valid``;
+padded D columns contribute zeros to QKᵀ and are sliced from the output),
+and interpret-mode selection off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+_LANE = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_offset", "bq", "bk",
+                     "interpret"),
+)
+def flash_attention(
+    q,                       # (B, Hq, Lq, D)
+    k,                       # (B, Hkv, Lk, D)
+    v,                       # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool | None = None,
+):
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lk, _ = k.shape
+    Dv = v.shape[-1]
+    if Dv != D:          # MLA-style separate V head dim: pad V to D, slice out
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, D - Dv)))
+    if Hq % Hkv:
+        raise ValueError(f"GQA needs Hkv|Hq, got {Hq=} {Hkv=}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    bq_eff = min(bq, _round_up(Lq, 8))
+    bk_eff = min(bk, _round_up(Lk, _LANE))
+    Lqp = _round_up(Lq, bq_eff)
+    Lkp = _round_up(Lk, bk_eff)
+    Dp = _round_up(D, _LANE)
+
+    def pad(x, L, D_):
+        return jnp.pad(
+            x, ((0, 0), (0, 0), (0, L - x.shape[2]), (0, D_ - x.shape[3]))
+        )
+
+    qp = pad(q, Lqp, Dp).reshape(B * Hq, Lqp, Dp)
+    kp = pad(k, Lkp, Dp).reshape(B * Hkv, Lkp, Dp)
+    vp = pad(v, Lkp, Dp).reshape(B * Hkv, Lkp, Dp)
+
+    # padded D inflates the softmax scale if we derive it from Dp — pass the
+    # true-D scale by pre-scaling q instead.
+    qp = qp * (Dp ** 0.5 / D ** 0.5)
+
+    out = flash_attention_pallas(
+        qp, kp, vp, bq=bq_eff, bk=bk_eff, causal=causal, window=window,
+        softcap=softcap, group=Hq // Hkv, q_offset=q_offset, lk_valid=Lk,
+        interpret=interpret,
+    )
+    return out.reshape(B, Hq, Lqp, Dp)[:, :, :Lq, :Dv]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for flash_attention.
+
+Supports: causal masking, GQA (Hq a multiple of Hkv), sliding-window
+(local) attention, and gemma2-style attention-logit softcapping.  All math
+in float32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q,                      # (B, Hq, Lq, D)
+    k,                      # (B, Hkv, Lk, D)
+    v,                      # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,        # 0 = global; w>0 = attend to keys within w of i
+    softcap: float = 0.0,
+    q_offset: int = 0,      # absolute position of q[0] (prefill continuation)
+):
+    B, Hq, Lq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32) / jnp.sqrt(D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Lq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Lq, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

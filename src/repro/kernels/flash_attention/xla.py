@@ -1,0 +1,116 @@
+"""Flash attention in pure XLA ops (lax.scan over KV tiles).
+
+Same online-softmax tiling as the Pallas kernel, expressed as a scan so it
+lowers on any backend — the L×L logits tensor never exists.  Three jobs:
+
+* the dry-run's attention lowering: per-device memory/bytes profiles match
+  what the Pallas kernel does on TPU, so §Roofline and memory_analysis are
+  honest without analytic adjustment;
+* a production fallback path on backends without Mosaic;
+* ``unroll=True`` exposes every tile op to HloCostAnalysis (which counts
+  scan bodies once) — used by the dry-run's depth probes.
+
+Supports causal / sliding-window / softcap / GQA and a separate V head dim
+(MLA's 192-QK/128-V split).  Tests check exact agreement with ref.py and
+the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_offset", "bq", "bk",
+                     "unroll"),
+)
+def flash_attention_xla(
+    q,                       # (B, Hq, Lq, D)
+    k,                       # (B, Hkv, Lk, D)
+    v,                       # (B, Hkv, Lk, Dv)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    bq: int = 512,
+    bk: int = 512,
+    unroll: bool = False,
+):
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lk, Dv = v.shape
+    group = Hq // Hkv
+    bq = min(bq, Lq)
+    bk = min(bk, Lk)
+    nq = -(-Lq // bq)
+    nk = -(-Lk // bk)
+    Lqp, Lkp = nq * bq, nk * bk
+
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    if Lqp != Lq:
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, Lqp - Lq), (0, 0)))
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if Lkp != Lk:
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, Lkp - Lk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, Lkp - Lk), (0, 0)))
+
+    # (B, Hq, nq, bq, D); KV stay (B, Hkv, nk, bk, D*) — GQA via head map
+    qt = qf.reshape(B, Hq, nq, bq, D)
+    kt = kf.reshape(B, Hkv, nk, bk, D)
+    vt = vf.reshape(B, Hkv, nk, bk, Dv)
+
+    def one_q_tile(q_tile, kv_heads, iq):
+        """q_tile: (bq, D); kv_heads: (kt_h, vt_h) (nk, bk, D*)."""
+
+        kt_h, vt_h = kv_heads
+        q_lo = iq * bq + q_offset
+
+        def body(carry, inp):
+            m_prev, l_prev, acc = carry
+            k_blk, v_blk, jk = inp
+            s = q_tile @ k_blk.T                       # (bq, bk)
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = kpos < Lk
+            if causal:
+                mask &= qpos >= kpos
+            if window:
+                mask &= qpos - kpos < window
+            s = jnp.where(mask, s, _NEG_INF)
+            m_cur = jnp.max(s, axis=1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+            acc = acc * alpha + p @ v_blk
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((bq, 1), _NEG_INF, jnp.float32),
+                jnp.zeros((bq, 1), jnp.float32),
+                jnp.zeros((bq, Dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            body, init, (kt_h, vt_h, jnp.arange(nk)),
+            unroll=nk if unroll else 1)
+        return acc / jnp.where(l == 0.0, 1.0, l)
+
+    # vmap over q-tiles, then heads (with GQA head map), then batch
+    def per_head(q_h, k_h, v_h):
+        return jax.vmap(one_q_tile, in_axes=(0, None, 0))(
+            q_h, (k_h, v_h), jnp.arange(nq))
+
+    def per_batch(q_b, k_b, v_b):
+        kv_idx = jnp.arange(Hq) // group
+        return jax.vmap(per_head)(q_b, k_b[kv_idx], v_b[kv_idx])
+
+    out = jax.vmap(per_batch)(qt, kt, vt)              # (B,Hq,nq,bq,Dv)
+    out = out.reshape(B, Hq, Lqp, Dv)[:, :, :Lq]
+    return out.astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused masked factorization gradient.
+
+Given a block X (M×N), observation mask M, and factors U (M×r), W (N×r):
+
+    R  = mask ⊙ (X − U Wᵀ)
+    f  = ‖R‖²_F
+    gU = −2 R W
+    gW = −2 Rᵀ U
+
+This is the inner loop of the paper's Algorithm 1 (the f-part of every
+structure update).  All accumulation in float32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_factor_grad_ref(x, mask, u, w):
+    xf = x.astype(jnp.float32)
+    mf = mask.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    r = mf * (xf - uf @ wf.T)
+    loss = jnp.sum(r * r)
+    gu = (-2.0 * r @ wf).astype(u.dtype)
+    gw = (-2.0 * r.T @ uf).astype(w.dtype)
+    return loss, gu, gw

@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init) — this process, and only this process, sees 512
+placeholder CPU devices so ``jax.make_mesh`` can build the production
+meshes: 16×16 ("data","model") single-pod and 2×16×16 ("pod","data",
+"model") multi-pod.
+
+Per cell this lowers the real step function with ShapeDtypeStruct inputs
+(zero allocation), compiles it, and records:
+
+  * ``compiled.memory_analysis()`` — proves the cell fits (bytes/device),
+  * ``compiled.cost_analysis()``   — FLOPs / bytes for §Roofline,
+  * per-collective byte counts parsed from the optimized HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh pod1
+  python -m repro.launch.dryrun --all --out results/dryrun   # every cell
+  python -m repro.launch.dryrun --gossip-mc --mesh pod2      # paper's own workload
+"""
+
+import argparse
+import dataclasses as dc
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ARCHS, MeshConfig, TrainConfig, cells,
+                          get_model_config, get_shape)
+from repro.launch.mesh import (make_production_mesh, multi_pod_config,
+                               single_pod_config)
+from repro.models import build_model, input_specs
+from repro.models.api import Ctx
+from repro.roofline.hlo import collective_bytes_by_kind
+from repro.train.step import make_train_step, shardings_for
+from repro.serve.engine import make_prefill_step, make_serve_step
+
+
+def build_ctx(cfg, mesh, mesh_cfg: MeshConfig) -> Ctx:
+    ep = (cfg.moe is not None
+          and mesh_cfg.model > 1)
+    return Ctx(
+        attn_impl="flashref",          # XLA flash scan: kernel-equivalent
+                                       # memory profile on any backend
+        ep_axis="model" if ep else None,
+        ep_pad_to=mesh_cfg.model if ep else 0,
+        mesh=mesh,
+        dp=("pod", "data") if mesh_cfg.multi_pod else ("data",),
+        embed_impl="onehot",           # vocab-sharded tables: no SPMD gather
+        remat=(mesh_cfg.remat != "none"),
+        cache_dtype=jnp.bfloat16,
+    )
+
+
+def _probe_layers(cfg, k_units: int) -> dict:
+    """ModelConfig overrides realizing exactly ``k_units`` scan units."""
+
+    if cfg.family == "encdec":
+        return {"num_layers": k_units, "encoder_layers": k_units}
+    if cfg.family == "hybrid":
+        return {"num_layers": k_units * cfg.shared_attn_every}
+    if cfg.moe is not None and cfg.mla is not None:     # deepseek: 1 head layer
+        return {"num_layers": 1 + k_units}
+    if cfg.local_global_pattern:
+        return {"num_layers": k_units * cfg.local_global_pattern}
+    return {"num_layers": k_units}
+
+
+def _n_units(cfg) -> int:
+    if cfg.family == "encdec":
+        return cfg.num_layers                            # enc+dec move together
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.shared_attn_every
+    if cfg.moe is not None and cfg.mla is not None:
+        return cfg.num_layers - 1
+    if cfg.local_global_pattern:
+        return cfg.num_layers // cfg.local_global_pattern
+    return cfg.num_layers
+
+
+def _build_lowered(cfg, shape, mesh, mesh_cfg, ctx, microbatch: int = 8):
+    model = build_model(cfg, ctx)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if shape.kind == "train":
+        step, info = make_train_step(model, mesh, mesh_cfg, shape,
+                                     TrainConfig(microbatch=microbatch))
+        opt = jax.eval_shape(info["optimizer"].init, params)
+        return step.lower(params, opt, input_specs(cfg, shape))
+    if shape.kind == "prefill":
+        step, info = make_prefill_step(model, mesh, mesh_cfg, shape)
+        return step.lower(params, input_specs(cfg, shape))
+    step, info = make_serve_step(model, mesh, mesh_cfg, shape)
+    tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    return step.lower(params, info["cache_shapes"], tok, shape.seq_len - 1)
+
+
+def _costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_by_kind(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "coll": coll,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               mesh_cfg_overrides=None, probe: bool = True):
+    """Lower + compile one cell.
+
+    Two measurements per cell:
+    * the FULL model with scan-over-layers — the compile-success + memory
+      deliverable (HloCostAnalysis counts while-bodies once, so its FLOPs
+      are useless for deep stacks);
+    * two *depth probes* (1 and 2 scan units, unrolled) — per-unit cost by
+      finite difference, extrapolated exactly: total = c1 + (n−1)·(c2−c1).
+      Exact because every scan stack is homogeneous.
+    """
+
+    cfg = get_model_config(arch)
+    # production numerics: bf16 params/activations (f32 master moments live
+    # in the optimizer state; attention/CE accumulate f32)
+    cfg = dc.replace(cfg, param_dtype="bfloat16")
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_cfg = (multi_pod_config if multi_pod else single_pod_config)(
+        **(mesh_cfg_overrides or {}))
+    ctx = build_ctx(cfg, mesh, mesh_cfg)
+
+    t0 = time.time()
+    lowered = _build_lowered(cfg, shape, mesh, mesh_cfg, ctx)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+    }
+
+    if probe:
+        pctx = dc.replace(ctx, scan_layers=False, remat=False,
+                          attn_impl="flashref!")   # unroll KV tiles for HloCostAnalysis
+        cs = []
+        for k in (1, 2):
+            pcfg = dc.replace(cfg, **_probe_layers(cfg, k))
+            # microbatch=0: the grad-accumulation scan would hide 7/8 of the
+            # FLOPs from HloCostAnalysis (while bodies count once)
+            pc = _build_lowered(pcfg, shape, mesh, mesh_cfg, pctx,
+                                microbatch=0).compile()
+            cs.append(_costs(pc))
+        n = _n_units(cfg)
+        unit_f = max(cs[1]["flops"] - cs[0]["flops"], 0.0)
+        unit_b = max(cs[1]["bytes"] - cs[0]["bytes"], 0.0)
+        kinds = set(cs[0]["coll"]) | set(cs[1]["coll"])
+        coll = {
+            k: cs[0]["coll"].get(k, 0.0) + (n - 1) * max(
+                cs[1]["coll"].get(k, 0.0) - cs[0]["coll"].get(k, 0.0), 0.0)
+            for k in kinds
+        }
+        record.update({
+            "flops_per_device": cs[0]["flops"] + (n - 1) * unit_f,
+            "bytes_accessed_per_device": cs[0]["bytes"] + (n - 1) * unit_b,
+            "collective_bytes_per_device": sum(coll.values()),
+            "collectives": coll,
+            "probe": {"n_units": n, "c1": cs[0], "c2": cs[1]},
+        })
+    else:
+        c = _costs(compiled)
+        record.update({
+            "flops_per_device": c["flops"],
+            "bytes_accessed_per_device": c["bytes"],
+            "collective_bytes_per_device": sum(c["coll"].values()),
+            "collectives": c["coll"],
+        })
+    return record, compiled
+
+
+def run_gossip_mc(multi_pod: bool, data_dtype=None, mask_dtype=None):
+    """Dry-run the paper's own workload on the production mesh: the device
+    grid IS the agent grid (row=(pod,)data, col=model)."""
+
+    from repro.configs.gossip_mc import PRODUCTION as cfg
+    from repro.core import gossip
+    from repro.core.gossip import GossipCarry, HaloState
+    from repro.core.state import Problem, State
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if multi_pod:
+        row_axes, col_axes = ("pod", "data"), "model"
+        p, q = 2 * cfg.p, cfg.q          # grid spans pods
+    else:
+        row_axes, col_axes = "data", "model"
+        p, q = cfg.p, cfg.q
+    mb, nb = cfg.m // p, cfg.n // q
+    r = cfg.rank
+    sds = jax.ShapeDtypeStruct
+    problem = Problem(sds((p, q, mb, nb), data_dtype or jnp.float32),
+                      sds((p, q, mb, nb), mask_dtype or jnp.float32))
+    state = State(sds((p, q, mb, r), jnp.float32),
+                  sds((p, q, nb, r), jnp.float32),
+                  sds((), jnp.int32))
+    halos = HaloState(sds((p, mb, r), jnp.float32),
+                      sds((p, mb, r), jnp.float32),
+                      sds((q, nb, r), jnp.float32),
+                      sds((q, nb, r), jnp.float32))
+    carry = GossipCarry(state, halos,
+                        sds((p, mb, r), jnp.float32),
+                        sds((p, mb, r), jnp.float32),
+                        sds((q, nb, r), jnp.float32),
+                        sds((q, nb, r), jnp.float32))
+    step, _ = gossip.make_gossip_step(
+        mesh, (p, q), cfg, row_axes=row_axes, col_axes=col_axes,
+        use_kernel=False, steps_per_call=1)
+    t0 = time.time()
+    lowered = step.lower(problem, carry)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_by_kind(compiled.as_text())
+    tag = "" if data_dtype is None else "_bf16x_int8mask"
+    record = {
+        "arch": "gossip-mc", "shape": f"{cfg.m}x{cfg.n}_r{r}_grid{p}x{q}{tag}",
+        "mesh": "2x16x16" if multi_pod else "16x16", "kind": "gossip_round",
+        "compile_s": round(time.time() - t0, 1),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        "collective_bytes_per_device": sum(coll.values()),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+    }
+    return record, compiled
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod1", "pod2"], default="pod1")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--gossip-mc", action="store_true")
+    ap.add_argument("--gossip-compact", action="store_true",
+                    help="bf16 X + int8 mask storage (§Perf iteration)")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--hlo-out", default="",
+                    help="also dump optimized HLO text here")
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512, "dryrun must own 512 host devices"
+    records = []
+
+    def emit(record, compiled):
+        records.append(record)
+        print(json.dumps(record))
+        sys.stdout.flush()
+        if args.hlo_out:
+            name = f"{record['arch']}_{record['shape']}_{record['mesh']}.hlo"
+            with open(os.path.join(args.hlo_out, name), "w") as f:
+                f.write(compiled.as_text())
+
+    if args.gossip_mc:
+        kw = {}
+        if args.gossip_compact:
+            kw = dict(data_dtype=jnp.bfloat16, mask_dtype=jnp.int8)
+        record, compiled = run_gossip_mc(args.mesh == "pod2", **kw)
+        emit(record, compiled)
+    elif args.all:
+        for arch in ARCHS:
+            for shape_name in cells(arch):
+                for multi_pod in (False, True):
+                    try:
+                        record, compiled = lower_cell(arch, shape_name,
+                                                      multi_pod)
+                        emit(record, compiled)
+                    except Exception:
+                        print(f"FAILED {arch} {shape_name} "
+                              f"{'pod2' if multi_pod else 'pod1'}",
+                              file=sys.stderr)
+                        traceback.print_exc()
+                        return 1
+    else:
+        record, compiled = lower_cell(args.arch, args.shape,
+                                      args.mesh == "pod2")
+        emit(record, compiled)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        mode = "a" if os.path.exists(args.out) else "w"
+        with open(args.out, mode) as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init; tests
+import this under a 1-device runtime without side effects).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_config(cfg: MeshConfig):
+    if cfg.multi_pod:
+        shape = (cfg.pod, cfg.data, cfg.model)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (cfg.data, cfg.model)
+        axes = ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def single_pod_config(**kw) -> MeshConfig:
+    return MeshConfig(multi_pod=False, pod=1, data=16, model=16, **kw)
+
+
+def multi_pod_config(**kw) -> MeshConfig:
+    return MeshConfig(multi_pod=True, pod=2, data=16, model=16, **kw)
+
+
+def mesh_config_for(mesh, multi_pod: bool, **kw) -> MeshConfig:
+    """MeshConfig matching an existing (possibly small, test) mesh."""
+
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return MeshConfig(multi_pod=multi_pod, pod=ax.get("pod", 1),
+                      data=ax["data"], model=ax["model"], **kw)

@@ -1,0 +1,16 @@
+from repro.models.api import (
+    Ctx,
+    Model,
+    active_param_count,
+    build_model,
+    cache_specs,
+    input_specs,
+    matmul_param_count,
+    param_count,
+    param_specs,
+)
+
+__all__ = [
+    "Ctx", "Model", "active_param_count", "build_model", "cache_specs",
+    "input_specs", "matmul_param_count", "param_count", "param_specs",
+]

@@ -1,0 +1,168 @@
+"""Unified model API: ``build_model(cfg) -> Model`` for all 10 families.
+
+A ``Model`` packages init / loss / prefill / decode / init_cache behind one
+signature so the launcher, dry-run, and serving code never special-case
+families.  Batches are dicts:
+
+    LM:     {"tokens": (B,L) i32, "targets": (B,L) i32}
+    VLM:    + {"patches": (B,P,1024)}
+    encdec: {"frames": (B,T_frames,d)} + tokens/targets
+
+Param counting goes through ``jax.eval_shape(init)`` — exact, analytic,
+zero allocation — and ``active_param_count`` rescales routed-expert params
+by k/E for the MoE 6·N_active·D convention.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import transformer as T
+from repro.models import vlm as V
+
+Ctx = T.Ctx
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    ctx: T.Ctx
+    init: Callable[..., Any]
+    loss: Callable[..., Any]                 # (params, batch) -> scalar
+    prefill: Callable[..., Any]              # (params, batch, max_len) -> (logits, cache)
+    decode: Callable[..., Any]               # (params, cache, token, pos) -> (logits, cache)
+    init_cache: Callable[..., Any]           # (batch, max_len) -> cache
+
+
+def build_model(cfg: ModelConfig, ctx: T.Ctx | None = None) -> Model:
+    ctx = ctx or T.Ctx()
+    fam = cfg.family
+    if fam in ("dense", "moe", "ssm"):
+        return Model(
+            cfg, ctx,
+            init=lambda key: T.init_lm(key, cfg, ctx),
+            loss=lambda p, b: T.lm_loss(p, b["tokens"], b["targets"], cfg, ctx),
+            prefill=lambda p, b, ml: T.lm_prefill(p, b["tokens"], ml, cfg, ctx),
+            decode=lambda p, c, tok, pos: T.lm_decode_step(p, c, tok, pos, cfg, ctx),
+            init_cache=lambda bs, ml: T.lm_init_cache(cfg, ctx, bs, ml),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg, ctx,
+            init=lambda key: HY.init_hybrid(key, cfg, ctx),
+            loss=lambda p, b: HY.hybrid_loss(p, b["tokens"], b["targets"], cfg, ctx),
+            prefill=lambda p, b, ml: HY.hybrid_prefill(p, b["tokens"], ml, cfg, ctx),
+            decode=lambda p, c, tok, pos: HY.hybrid_decode_step(p, c, tok, pos, cfg, ctx),
+            init_cache=lambda bs, ml: HY.hybrid_init_cache(cfg, ctx, bs, ml),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg, ctx,
+            init=lambda key: ED.init_encdec(key, cfg, ctx),
+            loss=lambda p, b: ED.encdec_loss(
+                p, b["frames"], b["tokens"], b["targets"], cfg, ctx),
+            prefill=lambda p, b, ml: ED.encdec_prefill(
+                p, b["frames"], b["tokens"], ml, cfg, ctx),
+            decode=lambda p, c, tok, pos: ED.encdec_decode_step(
+                p, c, tok, pos, cfg, ctx),
+            init_cache=lambda bs, ml: ED.encdec_init_cache(cfg, ctx, bs, ml),
+        )
+    if fam == "vlm":
+        return Model(
+            cfg, ctx,
+            init=lambda key: V.init_vlm(key, cfg, ctx),
+            loss=lambda p, b: V.vlm_loss(
+                p, b["patches"], b["tokens"], b["targets"], cfg, ctx),
+            prefill=lambda p, b, ml: V.vlm_prefill(
+                p, b["patches"], b["tokens"], ml, cfg, ctx),
+            decode=lambda p, c, tok, pos: V.vlm_decode_step(p, c, tok, pos, cfg, ctx),
+            init_cache=lambda bs, ml: T.lm_init_cache(cfg, ctx, bs, ml),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation — dry-run contract)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch ShapeDtypeStructs for ``loss`` (train) or ``prefill``."""
+
+    B, Lx = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch: dict = {}
+    if cfg.family == "encdec":
+        batch["frames"] = sds((B, cfg.encoder_seq_len, cfg.d_model),
+                              jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = sds((B, cfg.num_patch_tokens, V._VISION_DIM),
+                               jnp.bfloat16)
+    batch["tokens"] = sds((B, Lx), jnp.int32)
+    if shape.kind == "train":
+        batch["targets"] = sds((B, Lx), jnp.int32)
+    return batch
+
+
+def cache_specs(model: Model, batch_size: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch_size, max_len))
+
+
+def param_specs(model: Model, seed: int = 0):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(seed)))
+
+
+# ---------------------------------------------------------------------------
+# Param counting (exact, via eval_shape)
+# ---------------------------------------------------------------------------
+
+
+def _count(tree, skip_embed: bool) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = jax.tree_util.keystr(path)
+        if skip_embed and ("embed" in name or "dec_pos" in name):
+            continue
+        total += math.prod(leaf.shape) if leaf.shape else 1
+    return total
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = param_specs(build_model(cfg))
+    return _count(shapes, skip_embed=False)
+
+
+def matmul_param_count(cfg: ModelConfig) -> int:
+    """Params that participate in matmuls per token (6·N·D convention):
+    excludes embedding lookups, *includes* the unembedding projection
+    (for tied embeddings the matmul still happens)."""
+
+    shapes = param_specs(build_model(cfg))
+    n = _count(shapes, skip_embed=True)
+    n += cfg.vocab_size * cfg.d_model          # unembed matmul
+    return n
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """matmul params with routed experts rescaled by k/E."""
+
+    shapes = param_specs(build_model(cfg))
+    if cfg.moe is None:
+        return matmul_param_count(cfg)
+    total = 0
+    frac = cfg.moe.num_experts_per_tok / cfg.moe.num_experts
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        name = jax.tree_util.keystr(path)
+        if "embed" in name or "dec_pos" in name:
+            continue
+        size = math.prod(leaf.shape) if leaf.shape else 1
+        if "moe" in name and name.split("'")[-2] in ("wi_gate", "wi_up", "wo"):
+            size = int(size * frac)
+        total += size
+    return total + cfg.vocab_size * cfg.d_model

@@ -1,0 +1,155 @@
+"""GQA attention: training/prefill path (flash kernel or jnp ref) and the
+cached decode path.
+
+The decode path keeps a static-shape KV cache (B, Hkv, Lmax, D) updated with
+``dynamic_update_slice`` and masks positions > pos — decode attention is a
+memory-bound gather; XLA handles it well, the Pallas kernel targets the
+compute-bound train/prefill shapes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.flash_attention.xla import flash_attention_xla
+from repro.models import layers as L
+
+
+class KVCache(NamedTuple):
+    k: jax.Array    # (B, Hkv, Lmax, D)
+    v: jax.Array
+
+
+def _attend(q, k, v, impl, *, causal, window=0, softcap=0.0, q_offset=0):
+    """Dispatch: Pallas kernel (TPU) | XLA flash scan (any backend, same
+    memory profile — the dry-run path) | naive reference (tests).
+    ``impl`` may be "flashref!" to unroll the KV scan (cost probes)."""
+
+    if impl == "kernel":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=q_offset)
+    if impl.startswith("flashref"):
+        return flash_attention_xla(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, q_offset=q_offset,
+                                   unroll=impl.endswith("!"))
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         softcap=softcap, q_offset=q_offset)
+
+
+def init_attention(key, d_model, num_heads, num_kv_heads, head_dim,
+                   qkv_bias, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d_model, num_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, num_kv_heads * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, num_kv_heads * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (num_heads * head_dim, d_model))
+               * (num_heads * head_dim) ** -0.5).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(params, x, num_heads, num_kv_heads, head_dim):
+    B, Lx, _ = x.shape
+    q = L.linear(x, params["wq"], params.get("bq"))
+    k = L.linear(x, params["wk"], params.get("bk"))
+    v = L.linear(x, params["wv"], params.get("bv"))
+    q = q.reshape(B, Lx, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(B, Lx, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(B, Lx, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def attention(
+    params, x, *, num_heads, num_kv_heads, head_dim,
+    causal=True, window=0, attn_softcap=0.0, rope_theta=10000.0,
+    positions=None, impl="ref",
+):
+    """Training / prefill self-attention.  x: (B, L, d)."""
+
+    B, Lx, _ = x.shape
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
+    if positions is None:
+        positions = jnp.arange(Lx)
+    q = L.apply_rope(q, positions, rope_theta)
+    k = L.apply_rope(k, positions, rope_theta)
+    o = _attend(q, k, v, impl, causal=causal, window=window,
+                softcap=attn_softcap)
+    o = o.transpose(0, 2, 1, 3).reshape(B, Lx, num_heads * head_dim)
+    return L.linear(o, params["wo"])
+
+
+def attention_prefill(
+    params, x, max_len, *, num_heads, num_kv_heads, head_dim,
+    window=0, attn_softcap=0.0, rope_theta=10000.0, impl="ref",
+    cache_dtype=jnp.bfloat16,
+):
+    """Causal forward over L prompt tokens + the KV cache (padded to
+    ``max_len``) needed to continue decoding at position L."""
+
+    B, Lx, _ = x.shape
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
+    positions = jnp.arange(Lx)
+    q = L.apply_rope(q, positions, rope_theta)
+    k = L.apply_rope(k, positions, rope_theta)
+    o = _attend(q, k, v, impl, causal=True, window=window,
+                softcap=attn_softcap)
+    o = o.transpose(0, 2, 1, 3).reshape(B, Lx, num_heads * head_dim)
+    pad = ((0, 0), (0, 0), (0, max_len - Lx), (0, 0))
+    cache = KVCache(
+        jnp.pad(k.astype(cache_dtype), pad), jnp.pad(v.astype(cache_dtype), pad)
+    )
+    return L.linear(o, params["wo"]), cache
+
+
+def init_cache(batch, num_kv_heads, max_len, head_dim, dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, num_kv_heads, max_len, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def decode_attention(
+    params, x, cache: KVCache, pos, *, num_heads, num_kv_heads, head_dim,
+    window=0, attn_softcap=0.0, rope_theta=10000.0,
+):
+    """One-token cached decode.  x: (B, 1, d); pos: scalar int32 (aligned
+    batch decoding).  Returns (out (B,1,d), updated cache)."""
+
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = L.apply_rope(q, posv, rope_theta)
+    k = L.apply_rope(k, posv, rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, 0, pos, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, 0, pos, 0))
+    Lmax = ck.shape[2]
+    group = num_heads // num_kv_heads
+    # grouped attention without materializing a repeated KV cache, and the
+    # cache consumed in its storage dtype (bf16/fp8) with f32 MXU
+    # accumulation — the cache IS the decode working set (up to 500k
+    # positions); an .astype(f32) here would triple the HBM traffic.
+    qg = q.reshape(B, num_kv_heads, group, head_dim)
+    qg = qg / jnp.sqrt(head_dim).astype(qg.dtype)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg, ck,
+                        preferred_element_type=jnp.float32)
+    logits = L.softcap(logits, attn_softcap)
+    kpos = jnp.arange(Lmax)
+    mask = kpos <= pos
+    if window:
+        mask &= kpos > pos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.astype(x.dtype).reshape(B, 1, num_heads * head_dim)
+    return L.linear(o, params["wo"]), KVCache(ck, cv)

@@ -1,0 +1,264 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+feeds precomputed frame embeddings (B, T_frames, d_model) — what whisper's
+two conv layers would produce.  Everything after that is faithful
+structure: sinusoidal encoder positions, learned decoder positions,
+pre-LayerNorm blocks, GELU MLPs, bidirectional encoder self-attention,
+causal decoder self-attention + cross-attention.
+
+Decode caches: per decoder layer a self-attn KV cache plus the
+cross-attn K/V computed once from the encoder output at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.transformer import Ctx, maybe_scan, wsc
+
+
+_MAX_POS = 49152
+
+
+class DecCache(NamedTuple):
+    self_kv: A.KVCache
+    cross_k: jax.Array   # (B, H, T_frames, hd)
+    cross_v: jax.Array
+
+
+def _sinusoid(length: int, d: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _init_ln(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _init_attn(key, d, h, dtype):
+    return A.init_attention(key, d, h, h, d // h, True, dtype)
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "attn": _init_attn(k1, cfg.d_model, cfg.num_heads, dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "mlp": L.init_mlp_gelu(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "self_attn": _init_attn(k1, cfg.d_model, cfg.num_heads, dtype),
+        "ln_x": _init_ln(cfg.d_model, dtype),
+        "cross_attn": _init_attn(k2, cfg.d_model, cfg.num_heads, dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "mlp": L.init_mlp_gelu(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig, ctx: Ctx) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "enc_layers": jax.vmap(
+            lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "enc_ln": _init_ln(cfg.d_model, dtype),
+        "dec_layers": jax.vmap(
+            lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "dec_ln": _init_ln(cfg.d_model, dtype),
+        "tok_embed": L.init_embedding(kt, cfg.vocab_size, cfg.d_model, dtype),
+        # learned decoder positions; sized for the assigned 32k decode cells
+        # (the real model stops at 448 — DESIGN.md §9)
+        "dec_pos": (jax.random.normal(kp, (_MAX_POS, cfg.d_model)) * 0.01
+                    ).astype(dtype),
+    }
+
+
+def _embed(params, tokens, ctx):
+    fn = L.embed_onehot if ctx.embed_impl == "onehot" else L.embed
+    return fn(params["tok_embed"], tokens)
+
+
+def _mha(params, x, kv_x, *, heads, causal, impl, window=0):
+    """LayerNorm-external multi-head attention (no rope)."""
+
+    B, Lq, d = x.shape
+    hd = d // heads
+    q = L.linear(x, params["wq"], params.get("bq"))
+    k = L.linear(kv_x, params["wk"], params.get("bk"))
+    v = L.linear(kv_x, params["wv"], params.get("bv"))
+    q = q.reshape(B, Lq, heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, kv_x.shape[1], heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, kv_x.shape[1], heads, hd).transpose(0, 2, 1, 3)
+    o = A._attend(q, k, v, impl, causal=causal, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(B, Lq, d)
+    return L.linear(o, params["wo"])
+
+
+def encode(params, frames, cfg: ModelConfig, ctx: Ctx):
+    """frames: (B, T, d) stub embeddings -> encoder memory (B, T, d)."""
+
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(xc, lp):
+        h = _mha(lp["attn"], L.layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"]),
+                 L.layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"]),
+                 heads=cfg.num_heads, causal=False, impl=ctx.attn_impl)
+        xc = xc + h
+        h = L.mlp_gelu(lp["mlp"], L.layer_norm(xc, lp["ln2"]["w"],
+                                               lp["ln2"]["b"]))
+        return xc + h, None
+
+    if ctx.remat:
+        body = jax.checkpoint(body)
+    x, _ = maybe_scan(body, x, params["enc_layers"], ctx)
+    return L.layer_norm(x, params["enc_ln"]["w"], params["enc_ln"]["b"])
+
+
+def _dec_layer_train(lp, x, memory, cfg, ctx):
+    h = _mha(lp["self_attn"], L.layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"]),
+             L.layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"]),
+             heads=cfg.num_heads, causal=True, impl=ctx.attn_impl)
+    x = x + h
+    h = _mha(lp["cross_attn"],
+             L.layer_norm(x, lp["ln_x"]["w"], lp["ln_x"]["b"]), memory,
+             heads=cfg.num_heads, causal=False, impl=ctx.attn_impl)
+    x = x + h
+    h = L.mlp_gelu(lp["mlp"], L.layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"]))
+    return x + h
+
+
+def encdec_loss(params, frames, tokens, targets, cfg: ModelConfig, ctx: Ctx):
+    memory = encode(params, frames, cfg, ctx)
+    x = wsc(_embed(params, tokens, ctx), ctx, ctx.dp, None, None)
+    x = x + params["dec_pos"][: tokens.shape[1]].astype(x.dtype)
+
+    def body(xc, lp):
+        return _dec_layer_train(lp, xc, memory, cfg, ctx), None
+
+    if ctx.remat:
+        body = jax.checkpoint(body)
+    x, _ = maybe_scan(body, x, params["dec_layers"], ctx)
+    x = L.layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    logits = x @ params["tok_embed"].T          # whisper ties embeddings
+    logits = wsc(logits, ctx, ctx.dp, None, "model")
+    return L.cross_entropy(logits, targets)
+
+
+def encdec_init_cache(cfg: ModelConfig, ctx: Ctx, batch: int, max_len: int):
+    hd = cfg.d_model // cfg.num_heads
+    kv = A.init_cache(batch, cfg.num_heads, max_len, hd, ctx.cache_dtype)
+    cross = jnp.zeros((batch, cfg.num_heads, cfg.encoder_seq_len, hd),
+                      ctx.cache_dtype)
+    one = DecCache(kv, cross, cross)
+    return jax.tree.map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
+
+
+def encdec_prefill(params, frames, tokens, max_len, cfg: ModelConfig, ctx: Ctx):
+    """Encode + causal decoder forward; returns (last logits, DecCache)."""
+
+    memory = encode(params, frames, cfg, ctx)
+    B, Lx = tokens.shape
+    hd = cfg.d_model // cfg.num_heads
+    x = _embed(params, tokens, ctx)
+    x = x + params["dec_pos"][:Lx].astype(x.dtype)
+
+    def body(xc, lp):
+        h_in = L.layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"])
+        q = L.linear(h_in, lp["self_attn"]["wq"], lp["self_attn"].get("bq"))
+        k = L.linear(h_in, lp["self_attn"]["wk"], lp["self_attn"].get("bk"))
+        v = L.linear(h_in, lp["self_attn"]["wv"], lp["self_attn"].get("bv"))
+        to_h = lambda t, n: t.reshape(B, n, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+        qh, kh, vh = to_h(q, Lx), to_h(k, Lx), to_h(v, Lx)
+        o = A._attend(qh, kh, vh, ctx.attn_impl, causal=True)
+        o = o.transpose(0, 2, 1, 3).reshape(B, Lx, cfg.d_model)
+        xc = xc + L.linear(o, lp["self_attn"]["wo"])
+        h = _mha(lp["cross_attn"],
+                 L.layer_norm(xc, lp["ln_x"]["w"], lp["ln_x"]["b"]), memory,
+                 heads=cfg.num_heads, causal=False, impl=ctx.attn_impl)
+        xc = xc + h
+        h = L.mlp_gelu(lp["mlp"], L.layer_norm(xc, lp["ln2"]["w"],
+                                               lp["ln2"]["b"]))
+        xc = xc + h
+        pad = ((0, 0), (0, 0), (0, max_len - Lx), (0, 0))
+        self_kv = A.KVCache(jnp.pad(kh.astype(ctx.cache_dtype), pad),
+                            jnp.pad(vh.astype(ctx.cache_dtype), pad))
+        ck = L.linear(memory, lp["cross_attn"]["wk"], lp["cross_attn"].get("bk"))
+        cv = L.linear(memory, lp["cross_attn"]["wv"], lp["cross_attn"].get("bv"))
+        Tm = memory.shape[1]
+        ck = ck.reshape(B, Tm, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+        cv = cv.reshape(B, Tm, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+        return xc, DecCache(self_kv, ck.astype(ctx.cache_dtype),
+                            cv.astype(ctx.cache_dtype))
+
+    x, cache = maybe_scan(body, x, params["dec_layers"], ctx)
+    x = L.layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    return (x @ params["tok_embed"].T)[:, -1], cache
+
+
+def encdec_decode_step(params, cache, token, pos, cfg: ModelConfig, ctx: Ctx):
+    B = token.shape[0]
+    hd = cfg.d_model // cfg.num_heads
+    x = _embed(params, token[:, None], ctx)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], pos, 1, 0).astype(x.dtype)
+
+    def body(xc, pc):
+        lp, c = pc
+        h_in = L.layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"])
+        q = L.linear(h_in, lp["self_attn"]["wq"], lp["self_attn"].get("bq"))
+        k = L.linear(h_in, lp["self_attn"]["wk"], lp["self_attn"].get("bk"))
+        v = L.linear(h_in, lp["self_attn"]["wv"], lp["self_attn"].get("bv"))
+        to_h = lambda t: t.reshape(B, 1, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+        qh, kh, vh = to_h(q), to_h(k), to_h(v)
+        ck_ = jax.lax.dynamic_update_slice(
+            c.self_kv.k, kh.astype(c.self_kv.k.dtype), (0, 0, pos, 0))
+        cv_ = jax.lax.dynamic_update_slice(
+            c.self_kv.v, vh.astype(c.self_kv.v.dtype), (0, 0, pos, 0))
+        mask = jnp.arange(ck_.shape[2]) <= pos
+        logits = jnp.einsum("bhqd,bhkd->bhqk",
+                            (qh / hd**0.5).astype(ck_.dtype), ck_,
+                            preferred_element_type=jnp.float32)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, -1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(cv_.dtype), cv_,
+                       preferred_element_type=jnp.float32)
+        o = o.astype(xc.dtype).transpose(0, 2, 1, 3).reshape(B, 1, cfg.d_model)
+        xc = xc + L.linear(o, lp["self_attn"]["wo"])
+        # cross attention against precomputed encoder K/V
+        h_in = L.layer_norm(xc, lp["ln_x"]["w"], lp["ln_x"]["b"])
+        q2 = L.linear(h_in, lp["cross_attn"]["wq"], lp["cross_attn"].get("bq"))
+        q2 = (to_h(q2) / hd**0.5).astype(c.cross_k.dtype)
+        lg = jnp.einsum("bhqd,bhkd->bhqk", q2, c.cross_k,
+                        preferred_element_type=jnp.float32)
+        p2 = jax.nn.softmax(lg, -1)
+        o2 = jnp.einsum("bhqk,bhkd->bhqd", p2.astype(c.cross_v.dtype),
+                        c.cross_v, preferred_element_type=jnp.float32)
+        o2 = o2.astype(xc.dtype).transpose(0, 2, 1, 3).reshape(B, 1, cfg.d_model)
+        xc = xc + L.linear(o2, lp["cross_attn"]["wo"])
+        h = L.mlp_gelu(lp["mlp"], L.layer_norm(xc, lp["ln2"]["w"],
+                                               lp["ln2"]["b"]))
+        xc = xc + h
+        return xc, DecCache(A.KVCache(ck_, cv_), c.cross_k, c.cross_v)
+
+    x, cache = maybe_scan(body, x, (params["dec_layers"], cache), ctx)
+    x = L.layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    return (x @ params["tok_embed"].T)[:, 0], cache

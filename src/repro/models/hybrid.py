@@ -1,0 +1,233 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+Zamba2's trick: attention capacity without attention parameter cost — a
+single transformer block (attn + MLP) is re-invoked every k Mamba2 layers.
+Faithful elements implemented here:
+
+* shared block params are stored once (``params["shared"]``) and closed
+  over inside the scan — invocations differ only through cheap
+  per-invocation LoRA adapters on the q/k/v projections (as in Zamba2);
+* the shared block sees ``concat(hidden, embedding)`` squeezed back to
+  d_model by a per-invocation projection (Zamba's concat re-injection);
+* each invocation keeps its own KV cache (same params ≠ same activations).
+
+Simplification noted in DESIGN.md: Zamba2 interleaves two alternating
+shared blocks; we use one (the k=every-6 schedule dominates behaviour).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as SSM
+from repro.models.transformer import Ctx, maybe_scan, wsc
+
+_LORA_RANK = 8
+
+
+def _shared_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": A.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 False, dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": L.init_mlp_swiglu(k2, cfg.d_model,
+                                 cfg.d_ff or 4 * cfg.d_model, dtype),
+    }
+
+
+def _unit_init(key, cfg: ModelConfig, dtype):
+    """One scan unit: k mamba layers + shared-block adapter params."""
+
+    k = cfg.shared_attn_every
+    keys = jax.random.split(key, k + 3)
+    mamba_keys = jnp.stack(keys[:k])
+    mamba = jax.vmap(lambda kk: {
+        "norm": jnp.zeros((cfg.d_model,), dtype),
+        "ssm": SSM.init_ssm(kk, cfg.d_model, cfg.ssm, dtype),
+    })(mamba_keys)
+    hd = cfg.resolved_head_dim
+    return {
+        "mamba": mamba,
+        "w_cat": (jax.random.normal(keys[k], (2 * cfg.d_model, cfg.d_model))
+                  * (2 * cfg.d_model) ** -0.5).astype(dtype),
+        "lora_a": (jax.random.normal(
+            keys[k + 1], (3, cfg.d_model, _LORA_RANK)) * 0.01).astype(dtype),
+        "lora_b": jnp.zeros(
+            (3, _LORA_RANK,
+             max(cfg.num_heads, cfg.num_kv_heads) * hd), dtype),
+    }
+
+
+def init_hybrid(key, cfg: ModelConfig, ctx: Ctx) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_units = cfg.num_layers // cfg.shared_attn_every
+    ke, ks, ku, kl = jax.random.split(key, 4)
+    unit_keys = jax.random.split(ku, n_units)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "shared": _shared_block_init(ks, cfg, dtype),
+        "units": jax.vmap(lambda k: _unit_init(k, cfg, dtype))(unit_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": (jax.random.normal(kl, (cfg.d_model, cfg.vocab_size))
+                    * cfg.d_model**-0.5).astype(dtype),
+    }
+
+
+def _lora_attn_params(shared_attn, unit, num_heads, num_kv_heads, head_dim):
+    """Shared attention weights + this invocation's LoRA deltas."""
+
+    p = dict(shared_attn)
+    for i, name in enumerate(("wq", "wk", "wv")):
+        width = (num_heads if name == "wq" else num_kv_heads) * head_dim
+        delta = unit["lora_a"][i] @ unit["lora_b"][i][:, :width]
+        p[name] = p[name] + delta
+    return p
+
+
+def _shared_apply_train(shared, unit, x, x0, cfg: ModelConfig, ctx: Ctx):
+    h = jnp.concatenate([x, x0], axis=-1) @ unit["w_cat"]
+    attn_p = _lora_attn_params(shared["attn"], unit, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.resolved_head_dim)
+    h1 = A.attention(
+        attn_p, L.rms_norm(h, shared["norm1"], cfg.norm_eps),
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, causal=True,
+        rope_theta=cfg.rope_theta, impl=ctx.attn_impl)
+    h = h + h1
+    h = h + L.mlp_swiglu(shared["mlp"], L.rms_norm(h, shared["norm2"],
+                                                   cfg.norm_eps))
+    return x + h
+
+
+def _unit_train(shared, unit, x, x0, cfg: ModelConfig, ctx: Ctx):
+    def mamba_body(xc, lp):
+        h = SSM.ssm_block(lp["ssm"], L.rms_norm(xc, lp["norm"], cfg.norm_eps),
+                          cfg.ssm, cfg.d_model)
+        return xc + h, None
+
+    x = _shared_apply_train(shared, unit, x, x0, cfg, ctx)
+    x, _ = maybe_scan(mamba_body, x, unit["mamba"], ctx)
+    return x
+
+
+def _embed(params, tokens, ctx):
+    fn = L.embed_onehot if ctx.embed_impl == "onehot" else L.embed
+    return wsc(fn(params["embed"], tokens), ctx, ctx.dp, None, None)
+
+
+def hybrid_loss(params, tokens, targets, cfg: ModelConfig, ctx: Ctx):
+    x = _embed(params, tokens, ctx)
+    x0 = x
+
+    body = lambda unit, xc: _unit_train(params["shared"], unit, xc, x0, cfg, ctx)
+    if ctx.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(xc, unit):
+        return body(unit, xc), None
+
+    x, _ = maybe_scan(scan_fn, x, params["units"], ctx)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = wsc(h @ params["lm_head"], ctx, ctx.dp, None, "model")
+    return L.cross_entropy(logits, targets)
+
+
+# ---------------------------------------------------------------------------
+# Decode / prefill
+# ---------------------------------------------------------------------------
+
+
+def hybrid_init_cache(cfg: ModelConfig, ctx: Ctx, batch: int, max_len: int):
+    n_units = cfg.num_layers // cfg.shared_attn_every
+    ssm_one = SSM.init_ssm_state(batch, cfg.d_model, cfg.ssm, ctx.cache_dtype)
+    kv_one = A.init_cache(batch, cfg.num_kv_heads, max_len,
+                          cfg.resolved_head_dim, ctx.cache_dtype)
+    k = cfg.shared_attn_every
+    return {
+        "ssm": jax.tree.map(
+            lambda a: jnp.zeros((n_units, k) + a.shape, a.dtype), ssm_one),
+        "kv": jax.tree.map(
+            lambda a: jnp.zeros((n_units,) + a.shape, a.dtype), kv_one),
+    }
+
+
+def _shared_apply_decode(shared, unit, kv, x, x0, pos, cfg, ctx):
+    h = jnp.concatenate([x, x0], axis=-1) @ unit["w_cat"]
+    attn_p = _lora_attn_params(shared["attn"], unit, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.resolved_head_dim)
+    h1, kv = A.decode_attention(
+        attn_p, L.rms_norm(h, shared["norm1"], cfg.norm_eps), kv, pos,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta)
+    h = h + h1
+    h = h + L.mlp_swiglu(shared["mlp"], L.rms_norm(h, shared["norm2"],
+                                                   cfg.norm_eps))
+    return x + h, kv
+
+
+def hybrid_decode_step(params, cache, token, pos, cfg: ModelConfig, ctx: Ctx):
+    x = _embed(params, token[:, None], ctx)
+    x0 = x
+
+    def unit_body(xc, pc):
+        unit, ssm_states, kv = pc
+        xc, kv = _shared_apply_decode(params["shared"], unit, kv, xc, x0,
+                                      pos, cfg, ctx)
+
+        def mamba_body(xm, lp_state):
+            lp, st = lp_state
+            h, st = SSM.ssm_decode(
+                lp["ssm"], L.rms_norm(xm, lp["norm"], cfg.norm_eps), st,
+                cfg.ssm, cfg.d_model)
+            return xm + h, st
+
+        xc, ssm_states = maybe_scan(mamba_body, xc,
+                                     (unit["mamba"], ssm_states), ctx)
+        return xc, (ssm_states, kv)
+
+    x, (ssm_states, kv) = maybe_scan(
+        unit_body, x, (params["units"], cache["ssm"], cache["kv"]), ctx)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (h @ params["lm_head"])[:, 0], {"ssm": ssm_states, "kv": kv}
+
+
+def hybrid_prefill(params, tokens, max_len, cfg: ModelConfig, ctx: Ctx):
+    x = _embed(params, tokens, ctx)
+    x0 = x
+    B, Lx, _ = x.shape
+
+    def unit_body(xc, unit):
+        h = jnp.concatenate([xc, x0], axis=-1) @ unit["w_cat"]
+        attn_p = _lora_attn_params(params["shared"]["attn"], unit,
+                                   cfg.num_heads, cfg.num_kv_heads,
+                                   cfg.resolved_head_dim)
+        h1, kv = A.attention_prefill(
+            attn_p, L.rms_norm(h, params["shared"]["norm1"], cfg.norm_eps),
+            max_len, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            impl=ctx.attn_impl, cache_dtype=ctx.cache_dtype)
+        h = h + h1
+        h = h + L.mlp_swiglu(params["shared"]["mlp"],
+                             L.rms_norm(h, params["shared"]["norm2"],
+                                        cfg.norm_eps))
+        xc = xc + h
+
+        def mamba_body(xm, lp):
+            hm, st = SSM.ssm_prefill(
+                lp["ssm"], L.rms_norm(xm, lp["norm"], cfg.norm_eps),
+                cfg.ssm, cfg.d_model)
+            return xm + hm, st
+
+        xc, ssm_states = maybe_scan(mamba_body, xc, unit["mamba"], ctx)
+        return xc, (ssm_states, kv)
+
+    x, (ssm_states, kv) = maybe_scan(unit_body, x, params["units"], ctx)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (h @ params["lm_head"])[:, -1], {"ssm": ssm_states, "kv": kv}

@@ -1,0 +1,150 @@
+"""Shared primitive layers (pure functions over param pytrees).
+
+No framework: params are nested dicts of jnp arrays; every layer is
+``apply(params, x, ...)``.  Initializers take an explicit key and return the
+same pytree structure, so ``jax.eval_shape(init)`` gives allocation-free
+ShapeDtypeStructs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+def linear(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (GPT-NeoX half-rotation convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, H, L, D); positions: (L,) or (B, L)."""
+
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., L, D/2)
+    if angles.ndim == 2:                              # (L, D/2) -> broadcast
+        angles = angles[None, None]
+    else:                                             # (B, L, D/2)
+        angles = angles[:, None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_swiglu(params, x):
+    g = jax.nn.silu(x @ params["wi_gate"])
+    return (g * (x @ params["wi_up"])) @ params["wo"]
+
+
+def mlp_gelu(params, x):
+    h = jax.nn.gelu(x @ params["wi"] + params["bi"], approximate=True)
+    return h @ params["wo"] + params["bo"]
+
+
+def init_mlp_swiglu(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "wi_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "wi_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (d_ff, d_model)) * s_ff).astype(dtype),
+    }
+
+
+def init_mlp_gelu(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": (jax.random.normal(k1, (d_model, d_ff)) * d_model**-0.5).astype(dtype),
+        "bi": jnp.zeros((d_ff,), dtype),
+        "wo": (jax.random.normal(k2, (d_ff, d_model)) * d_ff**-0.5).astype(dtype),
+        "bo": jnp.zeros((d_model,), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * d_model**-0.5).astype(dtype)
+
+
+def embed(emb, tokens):
+    return jnp.take(emb, tokens, axis=0)
+
+
+def embed_onehot(emb, tokens):
+    """Embedding lookup as one-hot × table matmul.
+
+    On a vocab-sharded table a gather forces GSPMD into involuntary full
+    rematerialization (replicates activations); the one-hot contraction
+    partitions cleanly over the vocab axis (local MXU matmul + one psum of
+    the (B,L,d) output) — the standard TPU trick.  Costs 2·B·L·V·d FLOPs,
+    noise next to the unembed matmul it mirrors."""
+
+    hot = jax.nn.one_hot(tokens, emb.shape[0], dtype=emb.dtype)
+    return hot @ emb
+
+
+def unembed(x, emb_or_head, tied: bool, cap: float = 0.0):
+    logits = x @ (emb_or_head.T if tied else emb_or_head)
+    return softcap(logits, cap)
+
+
+def cross_entropy(logits, targets, n_valid=None):
+    """Mean next-token CE in f32; targets == -1 are padding.
+
+    The gold logit is extracted with an iota-compare masked reduction, not
+    ``take_along_axis``: a gather over a vocab-sharded logits tensor forces
+    GSPMD into full rematerialization (replicating (B,L,V) per device),
+    while compare+select+reduce stays elementwise → partitions cleanly and
+    emits one small all-reduce over the vocab axis."""
+
+    logits = logits.astype(jnp.float32)
+    valid = targets >= 0
+    t = jnp.where(valid, targets, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    hit = vocab_iota == t[..., None]
+    gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    nll = jnp.where(valid, logz - gold, 0.0)
+    denom = jnp.maximum(jnp.sum(valid), 1) if n_valid is None else n_valid
+    return jnp.sum(nll) / denom

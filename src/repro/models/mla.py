@@ -1,0 +1,159 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+K/V are compressed into a small latent ``c_kv`` (kv_lora_rank) plus a single
+shared RoPE key head; the decode cache stores only (c_kv, k_rope) —
+~(512+64) floats per position instead of 2·H·D.  Decode uses the *absorbed*
+formulation: the K up-projection is absorbed into the query and the V
+up-projection into the output, so attention runs directly against the
+latent cache (the production DeepSeek serving trick).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MLAConfig
+from repro.models import layers as L
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array     # (B, Lmax, kv_lora)
+    k_rope: jax.Array   # (B, Lmax, rope_dim)
+
+
+def init_mla(key, d_model: int, num_heads: int, cfg: MLAConfig, dtype) -> dict:
+    kq, ka, kb, ko = jax.random.split(key, 4)
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    s = d_model**-0.5
+    return {
+        # v2-lite: full-rank queries (q_lora_rank == 0)
+        "wq": (jax.random.normal(kq, (d_model, num_heads * qk_dim)) * s).astype(dtype),
+        "wkv_a": (jax.random.normal(
+            ka, (d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim)) * s).astype(dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        "wkv_b": (jax.random.normal(
+            kb, (cfg.kv_lora_rank, num_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)))
+            * cfg.kv_lora_rank**-0.5).astype(dtype),
+        "wo": (jax.random.normal(ko, (num_heads * cfg.v_head_dim, d_model))
+               * (num_heads * cfg.v_head_dim) ** -0.5).astype(dtype),
+    }
+
+
+def _compress(params, x, cfg: MLAConfig, positions, rope_theta):
+    """x -> (c_kv normalized, k_rope roped).  Shapes (B,L,r), (B,L,dr)."""
+
+    ckr = L.linear(x, params["wkv_a"])
+    c_kv, k_rope = jnp.split(ckr, [cfg.kv_lora_rank], axis=-1)
+    c_kv = L.rms_norm(c_kv, params["kv_norm"])
+    k_rope = L.apply_rope(
+        k_rope[:, None], positions, rope_theta)[:, 0]     # single shared head
+    return c_kv, k_rope
+
+
+def _queries(params, x, num_heads, cfg: MLAConfig, positions, rope_theta):
+    B, Lx, _ = x.shape
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    q = L.linear(x, params["wq"]).reshape(B, Lx, num_heads, qk_dim)
+    q = q.transpose(0, 2, 1, 3)                            # (B,H,L,qk)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(params, x, *, num_heads, cfg: MLAConfig,
+                  rope_theta=10000.0, positions=None, impl="ref"):
+    """Training / prefill.  x: (B, L, d).
+
+    The two-part MLA score q_nope·k_nope + q_rope·k_rope folds into one
+    standard attention by concatenating [nope|rope] per head (the shared
+    rope key broadcasts across heads), with V keeping its own head dim —
+    so the flash paths (Pallas kernel / XLA scan) apply unchanged."""
+
+    from repro.models.attention import _attend
+
+    B, Lx, d = x.shape
+    if positions is None:
+        positions = jnp.arange(Lx)
+    q_nope, q_rope = _queries(params, x, num_heads, cfg, positions, rope_theta)
+    c_kv, k_rope = _compress(params, x, cfg, positions, rope_theta)
+    kv = L.linear(c_kv, params["wkv_b"]).reshape(
+        B, Lx, num_heads, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv.transpose(0, 2, 1, 3), [cfg.qk_nope_head_dim], -1)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)         # (B,H,L,192)
+    k_rope_b = jnp.broadcast_to(
+        k_rope[:, None], (B, num_heads, Lx, cfg.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    o = _attend(q, k, v, impl, causal=True)
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(
+        B, Lx, num_heads * cfg.v_head_dim)
+    return L.linear(o, params["wo"])
+
+
+def mla_prefill(params, x, max_len, *, num_heads, cfg: MLAConfig,
+                rope_theta=10000.0, cache_dtype=jnp.bfloat16, impl="ref"):
+    """Causal forward + latent cache padded to max_len."""
+
+    B, Lx, _ = x.shape
+    positions = jnp.arange(Lx)
+    out = mla_attention(params, x, num_heads=num_heads, cfg=cfg,
+                        rope_theta=rope_theta, positions=positions, impl=impl)
+    c_kv, k_rope = _compress(params, x, cfg, positions, rope_theta)
+    pad = ((0, 0), (0, max_len - Lx), (0, 0))
+    cache = MLACache(
+        jnp.pad(c_kv.astype(cache_dtype), pad),
+        jnp.pad(k_rope.astype(cache_dtype), pad),
+    )
+    return out, cache
+
+
+def init_mla_cache(batch, max_len, cfg: MLAConfig, dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    )
+
+
+def mla_decode(params, x, cache: MLACache, pos, *, num_heads, cfg: MLAConfig,
+               rope_theta=10000.0):
+    """Absorbed one-token decode against the latent cache.  x: (B,1,d)."""
+
+    B = x.shape[0]
+    posv = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _queries(params, x, num_heads, cfg, posv, rope_theta)
+    c_new, kr_new = _compress(params, x, cfg, posv, rope_theta)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, pos, 0))
+
+    wkv_b = params["wkv_b"].reshape(
+        cfg.kv_lora_rank, num_heads, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    w_k = wkv_b[..., : cfg.qk_nope_head_dim]               # (r, H, dn)
+    w_v = wkv_b[..., cfg.qk_nope_head_dim :]               # (r, H, dv)
+
+    # absorb K up-projection into the query: q_eff (B,H,1,r).  The latent
+    # cache is consumed in its storage dtype (f32 MXU accumulation) — an
+    # astype here would multiply the decode HBM traffic.
+    q_eff = jnp.einsum("bhqd,rhd->bhqr", q_nope, w_k,
+                       preferred_element_type=jnp.float32)
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    logits = (
+        jnp.einsum("bhqr,bkr->bhqk", q_eff.astype(c_kv.dtype), c_kv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhqd,bkd->bhqk", q_rope.astype(k_rope.dtype), k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    mask = jnp.arange(c_kv.shape[1]) <= pos
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhqk,bkr->bhqr", p.astype(c_kv.dtype), c_kv,
+                     preferred_element_type=jnp.float32)
+    o = jnp.einsum("bhqr,rhd->bhqd", ctx.astype(w_v.dtype), w_v,
+                   preferred_element_type=jnp.float32)
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(
+        B, 1, num_heads * cfg.v_head_dim)
+    return L.linear(o, params["wo"]), MLACache(c_kv, k_rope)

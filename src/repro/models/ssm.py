@@ -1,0 +1,279 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+Chunked SSD algorithm (Dao & Gu 2024, "minimal" formulation, adapted to
+jnp): within a chunk the recurrence is expanded into an attention-like
+quadratic form (MXU-friendly matmuls); across chunks a scan carries the
+(heads × head_dim × d_state) SSM state.  Decode is the O(1) recurrent
+update — this is why mamba2/zamba2 own the ``long_500k`` cells.
+
+Layer structure follows the reference Mamba2 block: in_proj → depthwise
+causal conv over (x,B,C) → SSD → gated RMSNorm → out_proj, n_groups=1
+(B/C shared across heads).
+
+TP note: projections are stored *per segment* (w_z, w_x, w_B, w_C, w_dt and
+separate convs) instead of one fused in_proj, so the head-aligned tensors
+(w_z, w_x, A_log, D, dt_bias, norm, out_proj) shard cleanly over the
+``model`` mesh axis — heads are independent in SSD, making Mamba TP
+communication-free between in/out projections (mirrors the Mamba-2 paper's
+own TP).  B/C/dt are tiny and stay replicated.  This is what makes the
+B=1 ``long_500k`` cells shardable at all.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SSMConfig
+from repro.models import layers as L
+
+
+class SSMState(NamedTuple):
+    h: jax.Array        # (B, nheads, head_dim, d_state)
+    conv_x: jax.Array   # (B, d_conv-1, d_inner) shift register
+    conv_B: jax.Array   # (B, d_conv-1, d_state)
+    conv_C: jax.Array   # (B, d_conv-1, d_state)
+
+
+def _dims(d_model: int, cfg: SSMConfig):
+    d_inner = cfg.d_inner(d_model)
+    nheads = cfg.n_heads(d_model)
+    return d_inner, nheads
+
+
+def init_ssm(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner, nheads = _dims(d_model, cfg)
+    ks = jax.random.split(key, 10)
+    s = d_model**-0.5
+    rnd = lambda k, shape, sc: (jax.random.normal(k, shape) * sc).astype(dtype)
+    return {
+        "w_z": rnd(ks[0], (d_model, d_inner), s),
+        "w_x": rnd(ks[1], (d_model, d_inner), s),
+        "w_B": rnd(ks[2], (d_model, cfg.d_state), s),
+        "w_C": rnd(ks[3], (d_model, cfg.d_state), s),
+        "w_dt": rnd(ks[4], (d_model, nheads), s),
+        "conv_x": rnd(ks[5], (cfg.d_conv, d_inner), cfg.d_conv**-0.5),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_B": rnd(ks[6], (cfg.d_conv, cfg.d_state), cfg.d_conv**-0.5),
+        "conv_B_b": jnp.zeros((cfg.d_state,), dtype),
+        "conv_C": rnd(ks[7], (cfg.d_conv, cfg.d_state), cfg.d_conv**-0.5),
+        "conv_C_b": jnp.zeros((cfg.d_state,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[8], (nheads,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": rnd(ks[9], (d_inner, d_model), d_inner**-0.5),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv, width K.  u: (B, L, C); w: (K, C)."""
+
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + u.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x):
+    """(..., T) -> (..., T, T): S[i,j] = Σ_{j<s<=i} x[s], -inf above diag."""
+
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.arange(T)[:, None] >= jnp.arange(T)[None, :]
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (b, l, h, p)   raw inputs (dt discretization applied internally)
+    dt: (b, l, h)      softplus'd step sizes
+    A:  (h,)           negative decay rates
+    Bm, Cm: (b, l, n)  shared across heads (n_groups=1)
+    Returns y: (b, l, h, p) and final state (b, h, p, n).
+    """
+
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    c = l // chunk
+    xc = x.reshape(b, c, chunk, h, p)
+    dtc = dt.reshape(b, c, chunk, h)
+    Bc = Bm.reshape(b, c, chunk, n)
+    Cc = Cm.reshape(b, c, chunk, n)
+
+    dA = dtc * A                                     # (b,c,t,h)
+    dA_cum = jnp.cumsum(dA, axis=2)                  # within-chunk cumsum
+
+    # 1. intra-chunk (diagonal blocks): attention-like quadratic form
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))       # (b,c,h,t,t)
+    scores = jnp.einsum("bcsn,bctn->bcst", Cc, Bc)          # (b,c,t_q,t_k)
+    y_diag = jnp.einsum("bcst,bchst,bcthp->bcshp",
+                        scores, Lmat, xc * dtc[..., None])
+
+    # 2. chunk-final states
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b,c,t,h)
+    states = jnp.einsum("bctn,bcth,bcthp->bchpn",
+                        Bc, dtc * decay_to_end, xc)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))               # (b,c,h)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final, h_prevs = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # (b,c,h,p,n)
+
+    # 4. contribution of carried state to each position
+    state_decay = jnp.exp(dA_cum)                            # (b,c,t,h)
+    y_off = jnp.einsum("bctn,bchpn,bcth->bcthp", Cc, h_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def ssd_reference(x, dt, A, Bm, Cm):
+    """O(L) sequential oracle for tests."""
+
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt * A)                                # (b,h)
+        hstate = hstate * dA[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhpn,bn->bhp", hstate, Ct)
+        return hstate, y
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final, ys = jax.lax.scan(
+        step, init,
+        (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+         Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def _proj_and_conv(params, x, cfg: SSMConfig):
+    z = L.linear(x, params["w_z"])
+    xs = _causal_conv(L.linear(x, params["w_x"]),
+                      params["conv_x"], params["conv_x_b"])
+    Bm = _causal_conv(L.linear(x, params["w_B"]),
+                      params["conv_B"], params["conv_B_b"])
+    Cm = _causal_conv(L.linear(x, params["w_C"]),
+                      params["conv_C"], params["conv_C_b"])
+    dt = jax.nn.softplus(
+        L.linear(x, params["w_dt"]).astype(jnp.float32) + params["dt_bias"])
+    return z, xs, Bm, Cm, dt
+
+
+def _finish(params, y, z, B_, Lx, d_inner, x_dtype):
+    y = y.reshape(B_, Lx, d_inner).astype(x_dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm"])
+    return L.linear(y, params["out_proj"])
+
+
+def ssm_block(params, x, cfg: SSMConfig, d_model: int, use_chunked=True):
+    """Full Mamba2 block, training path.  x: (B, L, d_model)."""
+
+    d_inner, nheads = _dims(d_model, cfg)
+    B_, Lx, _ = x.shape
+    z, xs, Bm, Cm, dt = _proj_and_conv(params, x, cfg)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B_, Lx, nheads, cfg.head_dim).astype(jnp.float32)
+    if use_chunked and Lx % cfg.chunk_size == 0 and Lx > cfg.chunk_size:
+        y, _ = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                           Cm.astype(jnp.float32), cfg.chunk_size)
+    else:
+        y, _ = ssd_reference(xh, dt, A, Bm.astype(jnp.float32),
+                             Cm.astype(jnp.float32))
+    y = y + params["D"][:, None] * xh
+    return _finish(params, y, z, B_, Lx, d_inner, x.dtype)
+
+
+def ssm_prefill(params, x, cfg: SSMConfig, d_model: int):
+    """Training-path forward + the SSMState to continue decoding at L."""
+
+    d_inner, nheads = _dims(d_model, cfg)
+    B_, Lx, _ = x.shape
+    z, xs_c, Bm_c, Cm_c, dt = _proj_and_conv(params, x, cfg)
+
+    # pre-conv activations feed the decode-time shift registers
+    def tail(u):
+        pad = jnp.pad(u, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+        return pad[:, Lx : Lx + cfg.d_conv - 1]
+
+    conv_x_t = tail(L.linear(x, params["w_x"]))
+    conv_B_t = tail(L.linear(x, params["w_B"]))
+    conv_C_t = tail(L.linear(x, params["w_C"]))
+
+    A = -jnp.exp(params["A_log"])
+    xh = xs_c.reshape(B_, Lx, nheads, cfg.head_dim).astype(jnp.float32)
+    if Lx % cfg.chunk_size == 0 and Lx > cfg.chunk_size:
+        y, h = ssd_chunked(xh, dt, A, Bm_c.astype(jnp.float32),
+                           Cm_c.astype(jnp.float32), cfg.chunk_size)
+    else:
+        y, h = ssd_reference(xh, dt, A, Bm_c.astype(jnp.float32),
+                             Cm_c.astype(jnp.float32))
+    y = y + params["D"][:, None] * xh
+    out = _finish(params, y, z, B_, Lx, d_inner, x.dtype)
+    state = SSMState(h, conv_x_t.astype(x.dtype), conv_B_t.astype(x.dtype),
+                     conv_C_t.astype(x.dtype))
+    return out, state
+
+
+def init_ssm_state(batch, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> SSMState:
+    d_inner, nheads = _dims(d_model, cfg)
+    return SSMState(
+        h=jnp.zeros((batch, nheads, cfg.head_dim, cfg.d_state), jnp.float32),
+        conv_x=jnp.zeros((batch, cfg.d_conv - 1, d_inner), dtype),
+        conv_B=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_state), dtype),
+        conv_C=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_state), dtype),
+    )
+
+
+def _conv_step(u_new, buf, w, b):
+    """One causal-conv step against a shift register.  u_new: (B, C)."""
+
+    window = jnp.concatenate([buf, u_new[:, None].astype(buf.dtype)], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    return jax.nn.silu(out + b), window[:, 1:]
+
+
+def ssm_decode(params, x, state: SSMState, cfg: SSMConfig, d_model: int):
+    """One-token recurrent decode.  x: (B, 1, d)."""
+
+    d_inner, nheads = _dims(d_model, cfg)
+    B_ = x.shape[0]
+    xt = x[:, 0]
+    z = L.linear(xt, params["w_z"])
+    xs, conv_x = _conv_step(L.linear(xt, params["w_x"]), state.conv_x,
+                            params["conv_x"], params["conv_x_b"])
+    Bm, conv_B = _conv_step(L.linear(xt, params["w_B"]), state.conv_B,
+                            params["conv_B"], params["conv_B_b"])
+    Cm, conv_C = _conv_step(L.linear(xt, params["w_C"]), state.conv_C,
+                            params["conv_C"], params["conv_C_b"])
+    dt = jax.nn.softplus(
+        L.linear(xt, params["w_dt"]).astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B_, nheads, cfg.head_dim).astype(jnp.float32)
+    dA = jnp.exp(dt * A)                                     # (B,h)
+    h_new = state.h * dA[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xh * dt[..., None], Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32))
+    y = y + params["D"][:, None] * xh
+    out = _finish(params, y[:, None], z[:, None], B_, 1, d_inner, x.dtype)
+    return out, SSMState(h_new, conv_x, conv_B, conv_C)

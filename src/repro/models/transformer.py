@@ -1,0 +1,433 @@
+"""Composable decoder-only LM: scan-over-units + four execution modes.
+
+A model is ``embed → [head units] → scan(repeated unit) → final_norm →
+unembed``.  A *unit* is a tuple of sublayers (so gemma2's local/global
+alternation is a 2-sublayer unit scanned 13×, zamba2's shared-attention
+pattern is a 6-mamba + 1-adapter unit scanned 9×).  Scanning over stacked
+unit params keeps the HLO (and compile time) independent of depth — the
+property that makes the 512-device dry-run of an 88-layer model tractable.
+
+Sublayers are described statically by ``SubLayer`` and dispatched here;
+params/caches are nested dicts keyed ``"s{i}"`` per sublayer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+
+@dataclasses.dataclass(frozen=True)
+class SubLayer:
+    mixer: str = "attn"        # attn | mla | ssm | none
+    ffn: str = "dense"         # dense | moe | none
+    window: int = 0            # sliding window (0 = global)
+    post_norm: bool = False    # gemma2 sandwich norms
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Build-time execution context."""
+
+    attn_impl: str = "ref"             # ref | kernel
+    scan_layers: bool = True           # False = unroll (dry-run depth probes)
+    ep_axis: Optional[str] = None      # MoE expert-parallel mesh axis
+    ep_pad_to: int = 0                 # pad experts to a multiple (EP axis size)
+    moe_impl: str = "psum"             # psum | a2a (EP combine strategy)
+    mesh: Any = None                   # required for EP shard_map inside jit
+    dp: Any = None                     # activation batch axes, e.g. ("pod","data")
+    remat: bool = False
+    cache_dtype: Any = jnp.bfloat16
+    embed_impl: str = "gather"         # gather | onehot (vocab-sharded tables)
+
+
+def wsc(x, ctx: "Ctx", *spec):
+    """with_sharding_constraint against ctx.mesh (no-op off-mesh).
+
+    GSPMD propagation alone loses the batch sharding around the vocab-dim
+    contractions (embed one-hot, tied unembed) and falls back to gathering
+    the *batch* (67GB logits replicas).  Pinning activations at the embed /
+    unit / logits boundaries is the standard production fix (MaxText pins
+    every layer)."""
+
+    if ctx.mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def maybe_scan(scan_fn, init, xs, ctx: "Ctx"):
+    """lax.scan over stacked layer params, or an unrolled Python loop when
+    ``ctx.scan_layers`` is False (the dry-run's depth probes need each
+    layer's ops visible to HloCostAnalysis, which counts while-bodies once)."""
+
+    if ctx.scan_layers:
+        return jax.lax.scan(scan_fn, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = scan_fn(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def unit_spec(cfg: ModelConfig) -> tuple[tuple[SubLayer, ...], int, list[SubLayer]]:
+    """(scanned unit sublayers, n_scan, head sublayers) for LM families."""
+
+    if cfg.family == "ssm":
+        return (SubLayer(mixer="ssm", ffn="none"),), cfg.num_layers, []
+    if cfg.family == "moe" and cfg.mla is not None:
+        # deepseek: layer 0 dense, rest MoE
+        head = [SubLayer(mixer="mla", ffn="dense")]
+        return (SubLayer(mixer="mla", ffn="moe"),), cfg.num_layers - 1, head
+    if cfg.family == "moe":
+        return (SubLayer(ffn="moe"),), cfg.num_layers, []
+    if cfg.local_global_pattern:
+        k = cfg.local_global_pattern
+        unit = tuple(
+            SubLayer(window=cfg.sliding_window if (i % k) != k - 1 else 0,
+                     post_norm=True)
+            for i in range(k)
+        )
+        return unit, cfg.num_layers // k, []
+    return (SubLayer(),), cfg.num_layers, []
+
+
+# ---------------------------------------------------------------------------
+# Sublayer init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_sublayer(key, cfg: ModelConfig, sl: SubLayer, ctx: Ctx) -> dict:
+    keys = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p: dict = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if sl.mixer == "attn":
+        p["attn"] = A.init_attention(
+            keys[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, cfg.qkv_bias, dtype)
+    elif sl.mixer == "mla":
+        p["attn"] = MLA.init_mla(keys[0], cfg.d_model, cfg.num_heads,
+                                 cfg.mla, dtype)
+    elif sl.mixer == "ssm":
+        p["ssm"] = SSM.init_ssm(keys[0], cfg.d_model, cfg.ssm, dtype)
+    if sl.ffn != "none":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        if sl.ffn == "moe":
+            p["moe"] = MOE.init_moe(keys[1], cfg.d_model, cfg.moe, dtype,
+                                    pad_to=ctx.ep_pad_to)
+        else:
+            p["mlp"] = L.init_mlp_swiglu(keys[1], cfg.d_model, cfg.d_ff, dtype)
+    if sl.post_norm:
+        p["post_norm1"] = jnp.zeros((cfg.d_model,), dtype)
+        if sl.ffn != "none":
+            p["post_norm2"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _mixer_train(p, x, cfg: ModelConfig, sl: SubLayer, ctx: Ctx):
+    if sl.mixer == "attn":
+        return A.attention(
+            p["attn"], x, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, causal=True, window=sl.window,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            impl=ctx.attn_impl)
+    if sl.mixer == "mla":
+        return MLA.mla_attention(p["attn"], x, num_heads=cfg.num_heads,
+                                 cfg=cfg.mla, rope_theta=cfg.rope_theta,
+                                 impl=ctx.attn_impl)
+    if sl.mixer == "ssm":
+        return SSM.ssm_block(p["ssm"], x, cfg.ssm, cfg.d_model)
+    return jnp.zeros_like(x)
+
+
+def apply_sublayer_train(p, x, cfg: ModelConfig, sl: SubLayer, ctx: Ctx):
+    """Pre-norm residual block; returns (x, aux)."""
+
+    aux = jnp.zeros((), jnp.float32)
+    h = _mixer_train(p, L.rms_norm(x, p["norm1"], cfg.norm_eps), cfg, sl, ctx)
+    if sl.post_norm:
+        h = L.rms_norm(h, p["post_norm1"], cfg.norm_eps)
+    x = x + h
+    if sl.ffn != "none":
+        hin = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if sl.ffn == "moe":
+            h, aux = MOE.moe_ffn(p["moe"], hin, cfg.moe, ep_axis=ctx.ep_axis,
+                                 mesh=ctx.mesh, dp=ctx.dp, impl=ctx.moe_impl)
+        else:
+            h = L.mlp_swiglu(p["mlp"], hin)
+        if sl.post_norm:
+            h = L.rms_norm(h, p["post_norm2"], cfg.norm_eps)
+        x = x + h
+    return x, aux
+
+
+def init_sublayer_cache(cfg: ModelConfig, sl: SubLayer, batch: int,
+                        max_len: int, ctx: Ctx):
+    if sl.mixer == "attn":
+        return A.init_cache(batch, cfg.num_kv_heads, max_len,
+                            cfg.resolved_head_dim, ctx.cache_dtype)
+    if sl.mixer == "mla":
+        return MLA.init_mla_cache(batch, max_len, cfg.mla, ctx.cache_dtype)
+    if sl.mixer == "ssm":
+        return SSM.init_ssm_state(batch, cfg.d_model, cfg.ssm, ctx.cache_dtype)
+    return ()
+
+
+def apply_sublayer_decode(p, cache, x, pos, cfg: ModelConfig, sl: SubLayer,
+                          ctx: Ctx):
+    h_in = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if sl.mixer == "attn":
+        h, cache = A.decode_attention(
+            p["attn"], h_in, cache, pos, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            window=sl.window, attn_softcap=cfg.attn_softcap,
+            rope_theta=cfg.rope_theta)
+    elif sl.mixer == "mla":
+        h, cache = MLA.mla_decode(p["attn"], h_in, cache, pos,
+                                  num_heads=cfg.num_heads, cfg=cfg.mla,
+                                  rope_theta=cfg.rope_theta)
+    elif sl.mixer == "ssm":
+        h, cache = SSM.ssm_decode(p["ssm"], h_in, cache, cfg.ssm, cfg.d_model)
+    else:
+        h = jnp.zeros_like(x)
+    if sl.post_norm:
+        h = L.rms_norm(h, p["post_norm1"], cfg.norm_eps)
+    x = x + h
+    if sl.ffn != "none":
+        hin = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if sl.ffn == "moe":
+            h, _ = MOE.moe_ffn(p["moe"], hin, cfg.moe, ep_axis=ctx.ep_axis,
+                               mesh=ctx.mesh, dp=ctx.dp, impl=ctx.moe_impl)
+        else:
+            h = L.mlp_swiglu(p["mlp"], hin)
+        if sl.post_norm:
+            h = L.rms_norm(h, p["post_norm2"], cfg.norm_eps)
+        x = x + h
+    return x, cache
+
+
+def apply_sublayer_prefill(p, x, max_len, cfg: ModelConfig, sl: SubLayer,
+                           ctx: Ctx):
+    """Causal forward + cache for decode continuation; returns (x, cache)."""
+
+    h_in = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if sl.mixer == "attn":
+        h, cache = A.attention_prefill(
+            p["attn"], h_in, max_len, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            window=sl.window, attn_softcap=cfg.attn_softcap,
+            rope_theta=cfg.rope_theta, impl=ctx.attn_impl,
+            cache_dtype=ctx.cache_dtype)
+    elif sl.mixer == "mla":
+        h, cache = MLA.mla_prefill(p["attn"], h_in, max_len,
+                                   num_heads=cfg.num_heads, cfg=cfg.mla,
+                                   rope_theta=cfg.rope_theta,
+                                   cache_dtype=ctx.cache_dtype,
+                                   impl=ctx.attn_impl)
+    elif sl.mixer == "ssm":
+        h, cache = SSM.ssm_prefill(p["ssm"], h_in, cfg.ssm, cfg.d_model)
+    else:
+        h, cache = jnp.zeros_like(x), ()
+    if sl.post_norm:
+        h = L.rms_norm(h, p["post_norm1"], cfg.norm_eps)
+    x = x + h
+    if sl.ffn != "none":
+        hin = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if sl.ffn == "moe":
+            h, _ = MOE.moe_ffn(p["moe"], hin, cfg.moe, ep_axis=ctx.ep_axis,
+                               mesh=ctx.mesh, dp=ctx.dp, impl=ctx.moe_impl)
+        else:
+            h = L.mlp_swiglu(p["mlp"], hin)
+        if sl.post_norm:
+            h = L.rms_norm(h, p["post_norm2"], cfg.norm_eps)
+        x = x + h
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Unit = tuple of sublayers
+# ---------------------------------------------------------------------------
+
+
+def init_unit(key, cfg, unit: tuple[SubLayer, ...], ctx: Ctx) -> dict:
+    keys = jax.random.split(key, len(unit))
+    return {f"s{i}": init_sublayer(keys[i], cfg, sl, ctx)
+            for i, sl in enumerate(unit)}
+
+
+def apply_unit_train(params, x, cfg, unit, ctx):
+    aux = jnp.zeros((), jnp.float32)
+    for i, sl in enumerate(unit):
+        x, a = apply_sublayer_train(params[f"s{i}"], x, cfg, sl, ctx)
+        aux = aux + a
+    return x, aux
+
+
+def init_unit_cache(cfg, unit, batch, max_len, ctx):
+    return {f"s{i}": init_sublayer_cache(cfg, sl, batch, max_len, ctx)
+            for i, sl in enumerate(unit)}
+
+
+def apply_unit_decode(params, cache, x, pos, cfg, unit, ctx):
+    new_cache = {}
+    for i, sl in enumerate(unit):
+        x, c = apply_sublayer_decode(params[f"s{i}"], cache[f"s{i}"], x, pos,
+                                     cfg, sl, ctx)
+        new_cache[f"s{i}"] = c
+    return x, new_cache
+
+
+def apply_unit_prefill(params, x, max_len, cfg, unit, ctx):
+    cache = {}
+    for i, sl in enumerate(unit):
+        x, c = apply_sublayer_prefill(params[f"s{i}"], x, max_len, cfg, sl, ctx)
+        cache[f"s{i}"] = c
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / modes
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig, ctx: Ctx) -> dict:
+    unit, n_scan, head = unit_spec(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_units, k_head, k_lm = jax.random.split(key, 4)
+    params: dict = {
+        "embed": L.init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    unit_keys = jax.random.split(k_units, n_scan)
+    params["units"] = jax.vmap(lambda k: init_unit(k, cfg, unit, ctx))(unit_keys)
+    for i, sl in enumerate(head):
+        params[f"head{i}"] = init_sublayer(
+            jax.random.fold_in(k_head, i), cfg, sl, ctx)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_lm, (cfg.d_model, cfg.vocab_size)) *
+            cfg.d_model**-0.5).astype(dtype)
+    return params
+
+
+def _unembed(params, x, cfg, ctx=None):
+    emb = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.unembed(x, emb, cfg.tie_embeddings, cfg.logit_softcap)
+    if ctx is not None and x.ndim == 3:
+        logits = wsc(logits, ctx, ctx.dp, None, "model")
+    return logits
+
+
+def embed_tokens(params, tokens, cfg, ctx):
+    fn = L.embed_onehot if ctx.embed_impl == "onehot" else L.embed
+    x = fn(params["embed"], tokens) * _embed_scale(cfg)
+    return wsc(x, ctx, ctx.dp, None, None)
+
+
+def _embed_scale(cfg):
+    # gemma-style sqrt(d) embedding scale for softcapped models
+    return cfg.d_model**0.5 if cfg.logit_softcap else 1.0
+
+
+def lm_hidden_train(params, x, cfg: ModelConfig, ctx: Ctx):
+    """Embedded input -> final hidden states (+ MoE aux).  x: (B,L,d)."""
+
+    unit, n_scan, head = unit_spec(cfg)
+    for i, sl in enumerate(head):
+        x, _ = apply_sublayer_train(params[f"head{i}"], x, cfg, sl, ctx)
+
+    body = partial(apply_unit_train, cfg=cfg, unit=unit, ctx=ctx)
+    if ctx.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(carry, unit_params):
+        x, aux = carry
+        x, a = body(unit_params, x)
+        return (wsc(x, ctx, ctx.dp, None, None), aux + a), None
+
+    (x, aux), _ = maybe_scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)), params["units"], ctx)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def lm_loss(params, tokens, targets, cfg: ModelConfig, ctx: Ctx):
+    x = embed_tokens(params, tokens, cfg, ctx)
+    h, aux = lm_hidden_train(params, x, cfg, ctx)
+    logits = _unembed(params, h, cfg, ctx)
+    return L.cross_entropy(logits, targets) + aux
+
+
+def lm_init_cache(cfg: ModelConfig, ctx: Ctx, batch: int, max_len: int):
+    unit, n_scan, head = unit_spec(cfg)
+    caches = {
+        f"head{i}": init_sublayer_cache(cfg, sl, batch, max_len, ctx)
+        for i, sl in enumerate(head)
+    }
+
+    one = init_unit_cache(cfg, unit, batch, max_len, ctx)
+    caches["units"] = jax.tree.map(
+        lambda a: jnp.zeros((n_scan,) + a.shape, a.dtype), one)
+    return caches
+
+
+def lm_decode_step(params, cache, token, pos, cfg: ModelConfig, ctx: Ctx):
+    """token: (B,) int32; pos: scalar.  Returns (logits (B,V), cache)."""
+
+    unit, n_scan, head = unit_spec(cfg)
+    x = embed_tokens(params, token[:, None], cfg, ctx)
+    new_cache = dict(cache)
+    for i, sl in enumerate(head):
+        x, c = apply_sublayer_decode(params[f"head{i}"], cache[f"head{i}"],
+                                     x, pos, cfg, sl, ctx)
+        new_cache[f"head{i}"] = c
+
+    def scan_fn(x, pc):
+        unit_params, unit_cache = pc
+        x, c = apply_unit_decode(unit_params, unit_cache, x, pos, cfg, unit, ctx)
+        return x, c
+
+    x, units_cache = maybe_scan(
+        scan_fn, x, (params["units"], cache["units"]), ctx)
+    new_cache["units"] = units_cache
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, h[:, 0], cfg), new_cache
+
+
+def lm_prefill(params, tokens, max_len, cfg: ModelConfig, ctx: Ctx):
+    """tokens (B, L) -> (last-position logits (B,V), cache for decode)."""
+
+    unit, n_scan, head = unit_spec(cfg)
+    x = embed_tokens(params, tokens, cfg, ctx)
+    cache = {}
+    for i, sl in enumerate(head):
+        x, c = apply_sublayer_prefill(params[f"head{i}"], x, max_len, cfg, sl, ctx)
+        cache[f"head{i}"] = c
+
+    body = partial(apply_unit_prefill, max_len=max_len, cfg=cfg, unit=unit,
+                   ctx=ctx)
+    if ctx.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, unit_params):
+        x, c = body(unit_params, x)
+        return x, c
+
+    x, units_cache = maybe_scan(scan_fn, x, params["units"], ctx)
+    cache["units"] = units_cache
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, h[:, -1], cfg), cache

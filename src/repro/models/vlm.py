@@ -1,0 +1,75 @@
+"""InternVL2-style VLM: LM backbone + patch-embedding stub.
+
+The vision tower (InternViT) is a STUB per the assignment: ``input_specs``
+supplies precomputed patch embeddings (B, P, d_vision→d_model already
+projected is overkill — we keep a real MLP projector, InternVL's actual
+glue layer).  Sequence = [patch tokens][text tokens], causal over the
+whole thing; loss only on text positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+_VISION_DIM = 1024   # stub InternViT output width
+
+
+def init_vlm(key, cfg: ModelConfig, ctx: T.Ctx) -> dict:
+    k1, k2 = jax.random.split(key)
+    params = T.init_lm(k1, cfg, ctx)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ka, kb = jax.random.split(k2)
+    params["projector"] = {
+        "w1": (jax.random.normal(ka, (_VISION_DIM, cfg.d_model))
+               * _VISION_DIM**-0.5).astype(dtype),
+        "w2": (jax.random.normal(kb, (cfg.d_model, cfg.d_model))
+               * cfg.d_model**-0.5).astype(dtype),
+    }
+    return params
+
+
+def _fuse(params, patches, tokens, cfg, ctx):
+    pe = jax.nn.gelu(patches @ params["projector"]["w1"])
+    pe = pe @ params["projector"]["w2"]
+    te = T.embed_tokens(params, tokens, cfg, ctx)
+    return jnp.concatenate([pe.astype(te.dtype), te], axis=1)
+
+
+def vlm_loss(params, patches, tokens, targets, cfg: ModelConfig, ctx: T.Ctx):
+    """patches: (B,P,Dv); tokens/targets: (B,L).  Loss on text only."""
+
+    x = _fuse(params, patches, tokens, cfg, ctx)
+    h, aux = T.lm_hidden_train(params, x, cfg, ctx)
+    h_text = h[:, patches.shape[1]:]
+    logits = T._unembed(params, h_text, cfg, ctx)
+    return L.cross_entropy(logits, targets) + aux
+
+
+def vlm_prefill(params, patches, tokens, max_len, cfg: ModelConfig, ctx: T.Ctx):
+    """Cache covers [patches][prompt]; positions are absolute in the fused
+    sequence."""
+
+    x = _fuse(params, patches, tokens, cfg, ctx)
+    unit, n_scan, head = T.unit_spec(cfg)
+    cache = {}
+    body = lambda p, xc: T.apply_unit_prefill(p, xc, max_len, cfg, unit, ctx)
+
+    def scan_fn(xc, unit_params):
+        xc, c = body(unit_params, xc)
+        return xc, c
+
+    x, units_cache = T.maybe_scan(scan_fn, x, params["units"], ctx)
+    cache["units"] = units_cache
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return T._unembed(params, h[:, -1], cfg), cache
+
+
+def vlm_decode_step(params, cache, token, pos, cfg: ModelConfig, ctx: T.Ctx):
+    """pos is absolute (patch count + text position)."""
+
+    return T.lm_decode_step(params, cache, token, pos, cfg, ctx)

@@ -1,0 +1,12 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    sgd,
+    paper_sgd,
+    make_optimizer,
+    clip_by_global_norm,
+    cosine_warmup,
+)
+
+__all__ = ["Optimizer", "adamw", "sgd", "paper_sgd", "make_optimizer",
+           "clip_by_global_norm", "cosine_warmup"]

@@ -1,0 +1,141 @@
+"""Pure-pytree optimizers (no optax in this environment).
+
+Same ``init(params) -> state`` / ``update(grads, state, params) ->
+(updates, state)`` contract as optax so swapping later is trivial.  All
+optimizer state is a pytree → it checkpoints and reshards exactly like
+params (checkpoint/manager.py relies on this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def cosine_warmup(base_lr: float, warmup: int, total: int):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw(lr_schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          max_grad_norm=0.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr = lr_schedule(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+
+        def upd(m, n, p):
+            u = (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+def sgd(lr_schedule, momentum=0.9, max_grad_norm=0.0):
+    def init(params):
+        return SGDState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr = lr_schedule(step)
+
+        mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state.momentum, grads)
+        updates = jax.tree.map(lambda m, p: (-lr * m).astype(p.dtype),
+                               mom, params)
+        return updates, SGDState(step, mom)
+
+    return Optimizer(init, update)
+
+
+def paper_sgd(a: float, b: float):
+    """The paper's plain SGD with γ_t = a / (1 + b t) (no momentum)."""
+
+    def init(params):
+        return SGDState(jnp.zeros((), jnp.int32), ())
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr = a / (1.0 + b * step.astype(jnp.float32))
+        updates = jax.tree.map(lambda g, p: (-lr * g).astype(p.dtype),
+                               grads, params)
+        return updates, SGDState(step, ())
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    sched = cosine_warmup(cfg.learning_rate, cfg.warmup_steps, cfg.total_steps)
+    if cfg.optimizer == "adamw":
+        return adamw(sched, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay,
+                     cfg.max_grad_norm)
+    if cfg.optimizer == "sgd":
+        return sgd(sched, cfg.beta1, cfg.max_grad_norm)
+    if cfg.optimizer == "paper_sgd":
+        return paper_sgd(cfg.learning_rate, 5e-7)
+    raise ValueError(cfg.optimizer)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,4 @@
+from repro.roofline.analysis import HW, roofline_terms, analyze_record
+from repro.roofline.hlo import collective_bytes_by_kind
+
+__all__ = ["HW", "roofline_terms", "analyze_record", "collective_bytes_by_kind"]

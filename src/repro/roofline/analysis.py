@@ -1,0 +1,101 @@
+"""Three-term roofline from dry-run records (TPU v5e targets).
+
+    compute    = FLOPs_per_device   / peak_FLOPs_per_chip
+    memory     = bytes_per_device   / HBM_bw_per_chip
+    collective = coll_bytes_per_dev / ICI_link_bw
+
+cost_analysis / the parsed HLO are *per-device* after SPMD partitioning, so
+dividing by per-chip peaks equals the spec's global/(chips×peak) form.
+The bottleneck is the max term; roofline fraction = compute / max(terms)
+(how close the cell is to being compute-bound, the best it can do).
+
+MODEL_FLOPS sanity: 6·N·D train / 2·N·D inference with N = matmul params
+(active for MoE), D = tokens.  The ratio MODEL_FLOPS/HLO_FLOPS exposes
+remat recompute and sharding waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip (v5e)
+    hbm_bw: float = 819e9               # B/s per chip
+    ici_bw: float = 50e9                # B/s per link
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, hw: HW = HW()) -> dict:
+    t_c = flops / hw.peak_flops
+    t_m = bytes_accessed / hw.hbm_bw
+    t_x = collective_bytes / hw.ici_bw
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dom = max(terms, key=terms.get)
+    peak = max(max(terms.values()), 1e-30)
+    return {
+        **terms,
+        "bottleneck": dom.replace("_s", ""),
+        "roofline_fraction": t_c / peak,
+    }
+
+
+def model_flops(cfg, shape, active: bool = True) -> float:
+    """6·N·D (train) / 2·N·D (one forward over D tokens)."""
+
+    from repro.models import active_param_count, matmul_param_count
+
+    n = active_param_count(cfg) if active else matmul_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_record(record: dict, hw: HW = HW()) -> dict:
+    from repro.config import get_model_config, get_shape
+
+    terms = roofline_terms(
+        record["flops_per_device"],
+        record["bytes_accessed_per_device"],
+        record["collective_bytes_per_device"], hw)
+    out = {**record, **terms}
+    chips = 512 if record["mesh"] == "2x16x16" else 256
+    hlo_global = record["flops_per_device"] * chips
+    if record["arch"] == "gossip-mc":
+        # per gossip round: R=M⊙(X−UWᵀ), gU=−2RW, gW=−2RᵀU per block —
+        # three (mb×nb×r) matmuls — plus O(edge) consensus terms.
+        import re
+
+        m_ = re.match(r"(\d+)x(\d+)_r(\d+)_grid(\d+)x(\d+)", record["shape"])
+        if m_:
+            m, n, r, p, q = map(int, m_.groups())
+            mf = 6.0 * m * n * r            # 3·2·mb·nb·r × (p·q blocks)
+            out["model_flops"] = mf
+            out["useful_flops_ratio"] = mf / hlo_global if hlo_global else 0.0
+    else:
+        cfg = get_model_config(record["arch"])
+        shape = get_shape(record["shape"])
+        mf = model_flops(cfg, shape)
+        out["model_flops"] = mf
+        out["useful_flops_ratio"] = mf / hlo_global if hlo_global else 0.0
+    return out
+
+
+def render_table(analyses: list[dict]) -> str:
+    cols = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "bottleneck", "roofline_fraction", "useful_flops_ratio")
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join(["---"] * len(cols)) + "|"]
+    for a in analyses:
+        row = []
+        for c in cols:
+            v = a.get(c, "")
+            row.append(f"{v:.3e}" if isinstance(v, float) else str(v))
+        lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines)

@@ -1,0 +1,94 @@
+"""Optimized-HLO text parsing: per-collective communication bytes.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+post-SPMD (per-device) HLO and sum *operand* sizes of every communication
+op, including async ``-start`` forms.  Sizes are per device — consistent
+with cost_analysis FLOPs, which are also per-device after partitioning.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# "%x = f32[8,128]{1,0} all-reduce(%y), replica_groups={{0,1},{2,3}}, ..."
+_LINE_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\b(" + "|".join(COLLECTIVES) +
+    r")(-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)  # iota form [ngroups,group_size]
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes_by_kind(hlo_text: str) -> dict[str, float]:
+    """{collective kind: wire bytes received per device} over the optimized
+    per-device module.
+
+    Conversions from the printed *result* shape (operand types are not
+    inlined in post-opt HLO):
+      all-reduce:          2·result·(n−1)/n   (ring reduce-scatter+all-gather)
+      all-gather:          result·(n−1)/n     (receives n−1 remote shards)
+      reduce-scatter:      result·(n−1)       (operand = n·result, receives
+                                               its share of each remote shard)
+      all-to-all:          result·(n−1)/n
+      collective-permute:  result             (one neighbour transfer)
+    """
+
+    out: dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype == "token" or dtype not in _DTYPE_BYTES:
+            # tuple-result async start: take shapes inside the tuple
+            shapes = re.findall(r"([a-z0-9]+)\[([0-9,]*)\]",
+                                line.split(kind)[0])
+            result = sum(_nelems(d) * _DTYPE_BYTES.get(t, 0)
+                         for t, d in shapes)
+        else:
+            result = _nelems(dims) * _DTYPE_BYTES[dtype]
+        n = max(_group_size(line), 1)
+        if kind == "all-reduce":
+            wire = 2.0 * result * (n - 1) / max(n, 1)
+        elif kind in ("all-gather", "all-to-all"):
+            wire = result * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            wire = result * (n - 1)
+        else:  # collective-permute
+            wire = float(result)
+        out[kind] += wire
+    return dict(out)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,3 @@
+from repro.serve.engine import make_prefill_step, make_serve_step, ServeLoop
+
+__all__ = ["make_prefill_step", "make_serve_step", "ServeLoop"]

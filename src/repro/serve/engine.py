@@ -1,0 +1,108 @@
+"""Serving: sharded prefill + single-token decode steps and a small batched
+decode loop (aligned continuous batching: all slots advance together; a
+finished slot is refilled at the next prefill boundary).
+
+``make_serve_step`` is what the ``decode_*`` / ``long_*`` dry-run cells
+lower: (params, cache, token, pos) -> (logits, cache), with the KV cache
+sharded per sharding.cache_pspecs_tree (batch→DP, heads→TP; for the B=1
+long-context cells sequence→data — the cache *is* the footprint there).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig, ShapeConfig
+from repro.models.api import Model, cache_specs, input_specs
+from repro.train import sharding as S
+from repro.train.step import shardings_for
+
+
+def _dp_or_none(mesh_cfg: MeshConfig, batch: int):
+    dp = S.dp_axes(mesh_cfg)
+    size = mesh_cfg.pod * mesh_cfg.data if mesh_cfg.multi_pod else mesh_cfg.data
+    return dp if batch % size == 0 else None
+
+
+def make_serve_step(model: Model, mesh, mesh_cfg: MeshConfig,
+                    shape_cfg: ShapeConfig):
+    """One-token decode with a seq_len-deep cache (the assigned decode cells)."""
+
+    cfg = model.cfg
+    B = shape_cfg.global_batch
+    max_len = shape_cfg.seq_len + (
+        cfg.num_patch_tokens if cfg.family == "vlm" else 0)
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = S.param_pspecs(cfg, param_shapes, mesh_cfg)
+    cshapes = cache_specs(model, B, max_len)
+    cspecs = S.cache_pspecs_tree(cfg, shape_cfg, mesh_cfg, cshapes)
+    tok_spec = P(_dp_or_none(mesh_cfg, B))
+
+    def serve_step(params, cache, token, pos):
+        return model.decode(params, cache, token, pos)
+
+    step = jax.jit(
+        serve_step,
+        in_shardings=(shardings_for(mesh, pspecs), shardings_for(mesh, cspecs),
+                      NamedSharding(mesh, tok_spec), None),
+        out_shardings=(None, shardings_for(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+    return step, {"pspecs": pspecs, "cspecs": cspecs, "cache_shapes": cshapes,
+                  "max_len": max_len}
+
+
+def make_prefill_step(model: Model, mesh, mesh_cfg: MeshConfig,
+                      shape_cfg: ShapeConfig, max_len: int | None = None):
+    cfg = model.cfg
+    B = shape_cfg.global_batch
+    max_len = max_len or shape_cfg.seq_len + (
+        cfg.num_patch_tokens if cfg.family == "vlm" else 0)
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = S.param_pspecs(cfg, param_shapes, mesh_cfg)
+    batch_tree = input_specs(cfg, shape_cfg)
+    bspecs = S.batch_pspecs(cfg, shape_cfg, mesh_cfg, batch_tree)
+    cshapes = cache_specs(model, B, max_len)
+    cspecs = S.cache_pspecs_tree(cfg, shape_cfg, mesh_cfg, cshapes)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    step = jax.jit(
+        prefill_step,
+        in_shardings=(shardings_for(mesh, pspecs), shardings_for(mesh, bspecs)),
+        out_shardings=(None, shardings_for(mesh, cspecs)),
+    )
+    return step, {"pspecs": pspecs, "bspecs": bspecs, "cspecs": cspecs,
+                  "max_len": max_len}
+
+
+class ServeLoop:
+    """Minimal batched greedy-decode driver (CPU-scale demo + tests)."""
+
+    def __init__(self, model: Model, params, batch_size: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self._decode = jax.jit(model.decode, static_argnums=())
+
+    def generate(self, batch: dict[str, Any], num_tokens: int):
+        prompt_len = batch["tokens"].shape[1]
+        extra = (self.model.cfg.num_patch_tokens
+                 if self.model.cfg.family == "vlm" else 0)
+        logits, cache = self.model.prefill(self.params, batch, self.max_len)
+        out = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+        for i in range(1, num_tokens):
+            logits, cache = self._decode(self.params, cache, tok,
+                                         prompt_len + extra + i - 1)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,10 @@
+from repro.train.sharding import (
+    batch_pspecs,
+    cache_pspecs_tree,
+    dp_axes,
+    param_pspecs,
+)
+from repro.train.step import make_train_step, make_eval_step
+
+__all__ = ["batch_pspecs", "cache_pspecs_tree", "dp_axes", "param_pspecs",
+           "make_train_step", "make_eval_step"]

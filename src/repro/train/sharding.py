@@ -1,0 +1,207 @@
+"""Sharding rules: param/cache/batch PartitionSpecs for every family.
+
+Policy (MaxText-style 2-D sharding, DESIGN.md §4):
+
+* **TP** over the ``model`` axis: attention heads / flat projection widths,
+  FFN hidden, vocab, MoE experts, Mamba heads.
+* **FSDP** over the ``data`` axis (optional): the non-TP matrix dim of each
+  weight; optimizer state inherits param specs so ZeRO falls out for free.
+* **DP** over ``("pod","data")``: the batch dim of activations; the ``pod``
+  axis never carries FSDP (cross-DCI all-gathers per layer would dominate —
+  pods are pure data parallel, gradient reduction is hierarchical).
+* Dims are sharded only when divisible by the axis size — rules degrade to
+  replication, never to invalid shardings (granite's kv=1 KV cache, qwen's
+  40 heads on a 16-way axis, granite-moe's 40 experts all hit this).
+
+Rules are expressed on the *trailing* dims of each leaf and padded with
+``None`` on the left, so scan-stacked params ((n_units, ...) or hybrid's
+(n_units, k, ...)) inherit the per-layer rule automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig, ShapeConfig
+
+
+def dp_axes(mesh_cfg: MeshConfig):
+    return ("pod", "data") if mesh_cfg.multi_pod else ("data",)
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+class _Rules:
+    def __init__(self, cfg: ModelConfig, mesh_cfg: MeshConfig):
+        self.cfg = cfg
+        self.model = mesh_cfg.model
+        self.fsdp = "data" if mesh_cfg.fsdp else None
+        self.fsdp_size = mesh_cfg.data if mesh_cfg.fsdp else 0
+
+    def _f(self, dim: int):
+        """FSDP axis for this dim, if divisible."""
+
+        return self.fsdp if self.fsdp and _div(dim, self.fsdp_size) else None
+
+    def _m(self, dim: int):
+        return "model" if _div(dim, self.model) else None
+
+    def trailing_spec(self, name: str, path: str, shape: tuple[int, ...]):
+        m, f = self._m, self._f
+        moe = "moe" in path and "shared" not in path
+        # vocab tensors: model-axis only.  Adding FSDP on their d dim makes
+        # the (B,L,·)×(d-sharded) contractions conflict with the batch's
+        # data-axis sharding and GSPMD resolves by un-sharding the *batch*
+        # (67GB logits replicas — see EXPERIMENTS.md §Perf iteration 1).
+        if name in ("embed", "tok_embed"):                 # (V, d)
+            return (m(shape[0]), None)
+        if name == "lm_head":                              # (d, V)
+            return (None, m(shape[1]))
+        if name == "dec_pos":
+            return (None, None)
+        if name == "router":                               # (d, E)
+            return (f(shape[0]), None)
+        if moe and name in ("wi_gate", "wi_up"):           # (E, d, ffe)
+            if _div(shape[0], self.model):                 # EP
+                return ("model", f(shape[1]), None)
+            return (None, f(shape[1]), m(shape[2]))        # TP-within-expert
+        if moe and name == "wo":                           # (E, ffe, d)
+            if _div(shape[0], self.model):
+                return ("model", None, f(shape[2]))
+            return (None, m(shape[1]), f(shape[2]))
+        if name in ("wq", "wk", "wv", "wi_gate", "wi_up", "wi", "w_z",
+                    "w_x", "w_cat", "wkv_b"):              # (in, out_tp)
+            return (f(shape[0]), m(shape[1]))
+        if name in ("wo", "out_proj", "w2"):               # (tp_in, out)
+            return (m(shape[0]), f(shape[1]))
+        if name in ("wkv_a", "w_B", "w_C", "w_dt", "w1"):  # (in, small)
+            return (f(shape[0]), None)
+        if name in ("bq", "bk", "bv", "bi", "conv_x_b", "norm"):
+            return (m(shape[0]),)
+        if name == "conv_x":                               # (K, d_inner)
+            return (None, m(shape[1]))
+        if name in ("A_log", "D", "dt_bias"):              # (nheads,)
+            return (m(shape[0]),)
+        if name == "lora_b":                               # (3, R, width)
+            return (None, None, m(shape[2]))
+        if name == "lora_a":                               # (3, d, R)
+            return (None, f(shape[1]), None)
+        return tuple(None for _ in shape)                  # norms, scalars, rest
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def param_pspecs(cfg: ModelConfig, param_shapes: Any, mesh_cfg: MeshConfig):
+    """Pytree of PartitionSpec matching ``param_shapes`` (from eval_shape)."""
+
+    rules = _Rules(cfg, mesh_cfg)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        pathstr = jax.tree_util.keystr(path)
+        trailing = rules.trailing_spec(name, pathstr, leaf.shape[-_rule_ndim(
+            name, pathstr):] if leaf.ndim else ())
+        # left-pad for scan stacking
+        pad = leaf.ndim - len(trailing)
+        return P(*([None] * pad + list(trailing)))
+
+    def _rule_ndim(name, pathstr):
+        moe = "moe" in pathstr and "shared" not in pathstr
+        if moe and name in ("wi_gate", "wi_up", "wo"):
+            return 3
+        if name in ("lora_a", "lora_b"):
+            return 3
+        if name in ("bq", "bk", "bv", "bi", "bo", "conv_x_b", "conv_B_b",
+                    "conv_C_b", "norm", "A_log", "D", "dt_bias", "kv_norm",
+                    "norm1", "norm2", "post_norm1", "post_norm2",
+                    "final_norm", "w", "b", "enc_ln", "dec_ln"):
+            return 1
+        return 2
+
+    return jax.tree_util.tree_map_with_path(spec_for, param_shapes)
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
+                 batch_tree: Any):
+    """Specs for a train/prefill batch dict: batch dim over DP when it
+    divides, else replicated (long_500k's B=1)."""
+
+    dp = dp_axes(mesh_cfg)
+    dp_size = mesh_cfg.pod * mesh_cfg.data if mesh_cfg.multi_pod else mesh_cfg.data
+    bdim = dp if _div(shape.global_batch, dp_size) else None
+
+    def spec_for(path, leaf):
+        return P(*([bdim] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_tree)
+
+
+def cache_pspecs_tree(cfg: ModelConfig, shape: ShapeConfig,
+                      mesh_cfg: MeshConfig, cache_shapes: Any):
+    """KV/SSM cache specs.
+
+    General decode (B divisible by DP): batch → DP, kv-heads → model.
+    long-context decode (B=1): heads → model, sequence → data (the KV cache
+    is the entire memory footprint at 500k — sequence sharding is what makes
+    the cell fit; SSM states shard by heads).
+    """
+
+    dp = dp_axes(mesh_cfg)
+    dp_size = mesh_cfg.pod * mesh_cfg.data if mesh_cfg.multi_pod else mesh_cfg.data
+    b_shardable = _div(shape.global_batch, dp_size)
+    model = mesh_cfg.model
+    data = mesh_cfg.data
+
+    def spec_for(path, leaf):
+        pathstr = jax.tree_util.keystr(path)
+        # identify the batch dim position: caches are stacked (n_scan, ...)
+        # or (n_units, k, ...); find the first dim equal to global_batch.
+        dims = [None] * leaf.ndim
+        try:
+            b_ix = leaf.shape.index(shape.global_batch)
+        except ValueError:
+            b_ix = None
+        if b_ix is not None and b_shardable:
+            dims[b_ix] = dp
+        if b_ix is None:
+            b_ix = -1  # nothing marked
+        # kv caches: (.., B, H, L, hd) / mla: (.., B, L, r) / ssm h: (.., B, nh, hd, ds)
+        if "c_kv" in pathstr or "k_rope" in pathstr:
+            if not b_shardable and _div(leaf.shape[b_ix + 2], data):
+                dims[b_ix + 2] = "data"                 # sequence sharding
+        elif ".h" in pathstr or "'h'" in pathstr:       # ssm state
+            if _div(leaf.shape[b_ix + 1], model):
+                dims[b_ix + 1] = "model"
+        elif leaf.ndim - (b_ix + 1) >= 3:               # KVCache k/v
+            h_ix, l_ix = b_ix + 1, b_ix + 2
+            if _div(leaf.shape[h_ix], model):
+                dims[h_ix] = "model"
+            elif _div(leaf.shape[l_ix], model):
+                # kv-head count not divisible (MQA/GQA-8 on a 16-way axis):
+                # shard the cache on sequence instead — decode attention
+                # reduces over L, which GSPMD partitions with a masked
+                # partial softmax + small psums.  Without this the cache
+                # replicates across the model axis (qwen decode_32k:
+                # 687 GB/device → 21 GB/device).
+                dims[l_ix] = "model"
+            if not b_shardable and _div(leaf.shape[l_ix], data) \
+                    and dims[l_ix] is None:
+                dims[l_ix] = "data"
+        elif "conv" in pathstr:
+            if _div(leaf.shape[-1], model):
+                dims[-1] = "model"
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)

@@ -1,0 +1,128 @@
+"""Jitted train/eval step factories with full sharding annotations.
+
+``make_train_step`` builds the production step: value_and_grad over the
+model loss, optional microbatched gradient accumulation (lax.scan), grad
+clipping + optimizer update, with in/out shardings derived from
+sharding.py and buffers donated (params/opt-state update in place).
+
+Gradient reduction across DP is implicit in GSPMD (the batch dim is sharded,
+so the loss-grad contraction emits the all-reduce); the hierarchical
+intra-pod-first schedule falls out of the (pod, data, model) mesh axis
+order on a real TPU topology.  The gossip alternative lives in
+train/gossip_dp.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig, ShapeConfig, TrainConfig
+from repro.models.api import Model, input_specs
+from repro.optim import Optimizer, make_optimizer
+from repro.optim.optimizers import AdamWState, SGDState, apply_updates
+from repro.train import sharding as S
+
+
+def opt_pspecs(opt_state: Any, param_specs: Any):
+    """Optimizer-state specs mirror param specs (ZeRO for free)."""
+
+    if isinstance(opt_state, AdamWState):
+        return AdamWState(P(), param_specs, param_specs)
+    if isinstance(opt_state, SGDState):
+        mom = param_specs if opt_state.momentum != () else ()
+        return SGDState(P(), mom)
+    raise TypeError(type(opt_state))
+
+
+def shardings_for(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_train_step(
+    model: Model,
+    mesh,
+    mesh_cfg: MeshConfig,
+    shape_cfg: ShapeConfig,
+    train_cfg: TrainConfig,
+    optimizer: Optimizer | None = None,
+):
+    """Returns (train_step, state_shardings) where
+    ``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``.
+    """
+
+    cfg = model.cfg
+    optimizer = optimizer or make_optimizer(train_cfg)
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = S.param_pspecs(cfg, param_shapes, mesh_cfg)
+    opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+    ospecs = opt_pspecs(opt_shapes, pspecs)
+    batch_tree = input_specs(cfg, shape_cfg)
+    bspecs = S.batch_pspecs(cfg, shape_cfg, mesh_cfg, batch_tree)
+
+    n_micro = train_cfg.microbatch
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if n_micro and n_micro > 1:
+            # microbatched accumulation: reshape leading batch dim
+            def split(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_l, acc_g = carry
+                return (acc_l + loss / n_micro,
+                        jax.tree.map(lambda a, b: a + b / n_micro, acc_g, g)), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(acc_fn, zero, micro)
+            return loss, grads
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    param_sh = shardings_for(mesh, pspecs)
+    opt_sh = shardings_for(mesh, ospecs)
+    batch_sh = shardings_for(mesh, bspecs)
+    step = jax.jit(
+        train_step,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return step, {
+        "params": param_sh, "opt": opt_sh, "batch": batch_sh,
+        "pspecs": pspecs, "ospecs": ospecs, "bspecs": bspecs,
+        "optimizer": optimizer,
+    }
+
+
+def make_eval_step(model: Model, mesh, mesh_cfg, shape_cfg):
+    cfg = model.cfg
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = S.param_pspecs(cfg, param_shapes, mesh_cfg)
+    batch_tree = input_specs(cfg, shape_cfg)
+    bspecs = S.batch_pspecs(cfg, shape_cfg, mesh_cfg, batch_tree)
+    step = jax.jit(
+        model.loss,
+        in_shardings=(shardings_for(mesh, pspecs), shardings_for(mesh, bspecs)),
+    )
+    return step

@@ -1,0 +1,92 @@
+"""Structure enumeration, Fig.-2 counts, wave disjointness (+ hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grid as G
+
+GRIDS = st.tuples(st.integers(2, 9), st.integers(2, 9))
+
+
+def test_structure_count_formula():
+    for p, q in [(2, 2), (4, 5), (6, 5), (7, 3)]:
+        assert len(G.enumerate_structures(p, q)) == 2 * (p - 1) * (q - 1)
+
+
+def test_fig2_relative_du_pattern_6x5():
+    """Figure 2(a): dU relative selection pattern is 1,2,2,2,1 per row."""
+
+    c = G.selection_counts(6, 5)["dU"]
+    for i in range(6):
+        row = c[i].astype(float)
+        np.testing.assert_allclose(row / row.min(), [1, 2, 2, 2, 1])
+
+
+def test_fig2_relative_dw_pattern_6x5():
+    c = G.selection_counts(6, 5)["dW"]
+    for j in range(5):
+        col = c[:, j].astype(float)
+        np.testing.assert_allclose(col / col.min(), [1, 2, 2, 2, 2, 1])
+
+
+def test_f_counts_structure_membership():
+    """f-count of a block == number of structures containing it."""
+
+    p, q = 5, 6
+    c = G.selection_counts(p, q)["f"]
+    for i in range(p):
+        for j in range(q):
+            n = 0
+            for kind, pi, pj in G.enumerate_structures(p, q):
+                if (i, j) in G.structure_blocks(int(kind), int(pi), int(pj)):
+                    n += 1
+            assert c[i, j] == n
+
+
+@settings(max_examples=25, deadline=None)
+@given(GRIDS)
+def test_waves_cover_all_structures_disjointly(pq):
+    p, q = pq
+    waves = G.wave_schedule(p, q)
+    G.assert_waves_disjoint(waves, p, q)
+    total = sum(len(w) for w in waves)
+    assert total == 2 * (p - 1) * (q - 1)
+    seen = set()
+    for w in waves:
+        for s in w:
+            seen.add(tuple(int(v) for v in s))
+    assert len(seen) == total
+
+
+@settings(max_examples=25, deadline=None)
+@given(GRIDS)
+def test_pair_normalization_sums_to_one(pq):
+    """coef × count == 1 for every touched pair and block (equal
+    representation, paper §4)."""
+
+    p, q = pq
+    counts = G.selection_counts(p, q)["f"]
+    coefs = G.normalization_coefficients(p, q)
+    np.testing.assert_allclose(coefs["f"] * counts, np.ones((p, q)))
+    pc = G.pair_counts(p, q)
+    np.testing.assert_allclose(coefs["dU"] * pc["dU"],
+                               np.ones_like(pc["dU"], float))
+    np.testing.assert_allclose(coefs["dW"] * pc["dW"],
+                               np.ones_like(pc["dW"], float))
+
+
+def test_blockify_roundtrip():
+    rng = np.random.default_rng(0)
+    spec = G.GridSpec(20, 12, 4, 3, 2)
+    x = rng.normal(size=(20, 12)).astype(np.float32)
+    xb, mb = G.blockify(x, np.ones_like(x), spec)
+    assert xb.shape == (4, 3, 5, 4)
+    np.testing.assert_array_equal(G.unblockify(xb, spec), x)
+
+
+def test_pad_to_grid():
+    x = np.ones((7, 5), np.float32)
+    xp, mp, m, n = G.pad_to_grid(x, np.ones_like(x), 3, 2)
+    assert (m, n) == (9, 6) and xp.shape == (9, 6)
+    assert mp[7:].sum() == 0 and mp[:, 5:].sum() == 0

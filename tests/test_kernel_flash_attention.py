@@ -1,0 +1,98 @@
+"""Flash attention (Pallas interpret + XLA scan) vs naive oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.flash_attention.xla import flash_attention_xla
+
+
+def _rand(B, Hq, Hkv, Lq, Lk, D, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(B, Hq, Lq, D)).astype(dtype)
+    k = rng.normal(size=(B, Hkv, Lk, D)).astype(dtype)
+    v = rng.normal(size=(B, Hkv, Lk, D)).astype(dtype)
+    return q, k, v
+
+
+CASES = [
+    dict(B=1, Hq=2, Hkv=2, Lq=128, Lk=128, D=64),
+    dict(B=2, Hq=8, Hkv=2, Lq=256, Lk=256, D=64, causal=True),
+    dict(B=1, Hq=4, Hkv=4, Lq=100, Lk=100, D=32, causal=False),
+    dict(B=1, Hq=4, Hkv=2, Lq=300, Lk=300, D=64, causal=True, window=128),
+    dict(B=1, Hq=2, Hkv=1, Lq=256, Lk=256, D=128, causal=True, softcap=50.0),
+    dict(B=1, Hq=2, Hkv=2, Lq=17, Lk=450, D=64, causal=True, q_offset=433),
+    dict(B=1, Hq=6, Hkv=3, Lq=64, Lk=64, D=80, causal=True),  # zamba2 hd=80
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_matches_oracle(case, impl):
+    case = dict(case)
+    B, Hq, Hkv = case.pop("B"), case.pop("Hq"), case.pop("Hkv")
+    Lq, Lk, D = case.pop("Lq"), case.pop("Lk"), case.pop("D")
+    q, k, v = _rand(B, Hq, Hkv, Lq, Lk, D)
+    fn = flash_attention if impl == "pallas" else flash_attention_xla
+    o1 = fn(q, k, v, **case)
+    o2 = attention_ref(q, k, v, **case)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_bf16():
+    q, k, v = _rand(1, 4, 2, 256, 256, 64)
+    q, k, v = (jnp.asarray(a, jnp.bfloat16) for a in (q, k, v))
+    o1 = flash_attention(q, k, v, causal=True)
+    o2 = attention_ref(q, k, v, causal=True)
+    err = np.abs(np.asarray(o1, np.float32) - np.asarray(o2, np.float32)).max()
+    assert err < 5e-2
+
+
+def test_xla_unroll_matches_scan():
+    q, k, v = _rand(1, 2, 2, 256, 256, 64)
+    o1 = flash_attention_xla(q, k, v, causal=True, unroll=False, bq=64, bk=64)
+    o2 = flash_attention_xla(q, k, v, causal=True, unroll=True, bq=64, bk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+
+
+def test_separate_v_dim_mla():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(1, 4, 64, 192)).astype(np.float32)
+    k = rng.normal(size=(1, 4, 64, 192)).astype(np.float32)
+    v = rng.normal(size=(1, 4, 64, 128)).astype(np.float32)
+    o_ref = attention_ref(q, k, v, causal=True)     # ref handles any v dim
+    o_x = flash_attention_xla(q, k, v, causal=True)
+    o_p = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_ref), rtol=2e-4,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 96),
+       st.integers(1, 96), st.sampled_from([16, 32, 64]),
+       st.booleans(), st.integers(1, 4))
+def test_property_random(B, Hkv, Lq, Lk, D, causal, group):
+    if causal and Lq > Lk:
+        Lq = Lk
+    q, k, v = _rand(B, Hkv * group, Hkv, Lq, Lk, D, seed=Lq * 97 + Lk)
+    o1 = flash_attention(q, k, v, causal=causal)
+    o2 = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4,
+                               atol=3e-5)
+
+
+def test_softmax_rows_sum_to_one_property():
+    """Output of attention over constant V must be that constant."""
+
+    B, H, L, D = 1, 2, 64, 32
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(B, H, L, D)).astype(np.float32)
+    k = rng.normal(size=(B, H, L, D)).astype(np.float32)
+    v = np.ones((B, H, L, D), np.float32) * 3.25
+    o = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), 3.25, rtol=1e-5)

@@ -1,0 +1,120 @@
+"""Decode-vs-full-forward equivalence for every family's cache machinery.
+
+The strongest correctness property a serving stack has: prefill(prompt) +
+decode(token) must equal a fresh full forward over prompt+token."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_smoke_config
+from repro.models import build_model
+from repro.models.api import Ctx
+
+CTX = Ctx(attn_impl="ref", cache_dtype=jnp.float32)
+
+
+def _rel_err(a, b):
+    return float(jnp.abs(a - b).max() / jnp.abs(b).max())
+
+
+@pytest.mark.parametrize("arch", [
+    "internlm2-20b", "gemma2-2b", "qwen1.5-32b", "granite-34b",
+    "mamba2-780m", "granite-moe-3b-a800m", "deepseek-v2-lite-16b",
+])
+def test_lm_decode_equals_full_forward(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, CTX)
+    params = model.init(jax.random.PRNGKey(0))
+    B, L = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, cfg.vocab_size)
+    logits_p, cache = model.prefill(params, {"tokens": toks}, L + 4)
+    nxt = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    logits_d, _ = model.decode(params, cache, nxt, L)
+    toks2 = jnp.concatenate([toks, nxt[:, None]], 1)
+    logits_full, _ = model.prefill(params, {"tokens": toks2}, L + 5)
+    assert _rel_err(logits_d, logits_full) < 2e-2, arch
+
+
+def test_hybrid_decode_equals_full_forward():
+    cfg = get_smoke_config("zamba2-2.7b")
+    model = build_model(cfg, CTX)
+    params = model.init(jax.random.PRNGKey(0))
+    B, L = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, cfg.vocab_size)
+    logits_p, cache = model.prefill(params, {"tokens": toks}, L + 4)
+    nxt = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    logits_d, _ = model.decode(params, cache, nxt, L)
+    toks2 = jnp.concatenate([toks, nxt[:, None]], 1)
+    logits_full, _ = model.prefill(params, {"tokens": toks2}, L + 5)
+    assert _rel_err(logits_d, logits_full) < 2e-2
+
+
+def test_encdec_decode_equals_full_forward():
+    cfg = get_smoke_config("whisper-large-v3")
+    model = build_model(cfg, CTX)
+    params = model.init(jax.random.PRNGKey(0))
+    B, L = 2, 12
+    frames = jax.random.normal(jax.random.PRNGKey(3),
+                               (B, cfg.encoder_seq_len, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "frames": frames}
+    logits_p, cache = model.prefill(params, batch, L + 4)
+    nxt = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    logits_d, _ = model.decode(params, cache, nxt, L)
+    batch2 = {"tokens": jnp.concatenate([toks, nxt[:, None]], 1),
+              "frames": frames}
+    logits_full, _ = model.prefill(params, batch2, L + 5)
+    assert _rel_err(logits_d, logits_full) < 2e-2
+
+
+def test_vlm_decode_equals_full_forward():
+    cfg = get_smoke_config("internvl2-76b")
+    model = build_model(cfg, CTX)
+    params = model.init(jax.random.PRNGKey(0))
+    B, L, Pt = 2, 12, cfg.num_patch_tokens
+    patches = jax.random.normal(jax.random.PRNGKey(4), (B, Pt, 1024))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "patches": patches}
+    logits_p, cache = model.prefill(params, batch, L + Pt + 4)
+    nxt = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    logits_d, _ = model.decode(params, cache, nxt, L + Pt)
+    batch2 = {"tokens": jnp.concatenate([toks, nxt[:, None]], 1),
+              "patches": patches}
+    logits_full, _ = model.prefill(params, batch2, L + Pt + 5)
+    assert _rel_err(logits_d, logits_full) < 2e-2
+
+
+def test_flashref_equals_ref_through_model():
+    """Whole-model forward with the XLA flash path == naive path."""
+
+    cfg = get_smoke_config("gemma2-2b")
+    m_ref = build_model(cfg, Ctx(attn_impl="ref", cache_dtype=jnp.float32))
+    m_fl = build_model(cfg, Ctx(attn_impl="flashref", cache_dtype=jnp.float32))
+    params = m_ref.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                     cfg.vocab_size),
+        "targets": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                      cfg.vocab_size),
+    }
+    l1 = float(m_ref.loss(params, batch))
+    l2 = float(m_fl.loss(params, batch))
+    assert abs(l1 - l2) < 1e-3 * max(abs(l1), 1.0)
+
+
+def test_onehot_embed_equals_gather_through_model():
+    cfg = get_smoke_config("internlm2-20b")
+    m_g = build_model(cfg, Ctx(attn_impl="ref", cache_dtype=jnp.float32))
+    m_o = build_model(cfg, Ctx(attn_impl="ref", cache_dtype=jnp.float32,
+                               embed_impl="onehot"))
+    params = m_g.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                     cfg.vocab_size),
+        "targets": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                      cfg.vocab_size),
+    }
+    assert abs(float(m_g.loss(params, batch)) -
+               float(m_o.loss(params, batch))) < 1e-4

@@ -1,0 +1,52 @@
+"""HLO collective parser + roofline-term unit tests (pure string/math)."""
+
+import numpy as np
+
+from repro.roofline.analysis import HW, roofline_terms
+from repro.roofline.hlo import collective_bytes_by_kind, count_op
+
+HLO = """
+HloModule test
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256] %x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%sum
+  %ag = bf16[64,512]{1,0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %rs = f32[32,32]{1,0} reduce-scatter(%z), replica_groups={{0,1}}, dimensions={0}
+  %cp = bf16[1024]{0} collective-permute(%w), source_target_pairs={{0,1},{1,2}}
+  %ars = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-reduce-start(%v), replica_groups={{0,1,2,3}}
+  %ard = f32[16,16]{1,0} all-reduce-done(%ars)
+  %aa = f32[8,64]{1,0} all-to-all(%u), replica_groups={{0,1,2,3}}, dimensions={0}
+"""
+
+
+def test_collective_bytes_ring_model():
+    out = collective_bytes_by_kind(HLO)
+    n_ar = 128 * 256 * 4
+    # all-reduce: 2·bytes·(n-1)/n with n=4; plus the async start (16·16·4, n=4)
+    expect_ar = 2 * n_ar * 3 / 4 + 2 * (16 * 16 * 4) * 3 / 4
+    np.testing.assert_allclose(out["all-reduce"], expect_ar)
+    # all-gather: result·(n-1)/n, iota groups [2,8] -> group size 8
+    np.testing.assert_allclose(out["all-gather"], 64 * 512 * 2 * 7 / 8)
+    # reduce-scatter: result·(n-1), n=2
+    np.testing.assert_allclose(out["reduce-scatter"], 32 * 32 * 4 * 1)
+    # collective-permute: result
+    np.testing.assert_allclose(out["collective-permute"], 1024 * 2)
+    np.testing.assert_allclose(out["all-to-all"], 8 * 64 * 4 * 3 / 4)
+
+
+def test_done_ops_not_double_counted():
+    assert count_op(HLO, "all-reduce-done") == 1
+    out = collective_bytes_by_kind(HLO)
+    # if -done were counted, all-reduce total would include a third term
+    assert out["all-reduce"] < 2 * (128 * 256 * 4) * 3 / 4 + 2 * (16 * 16 * 4)
+
+
+def test_roofline_terms_bottleneck_selection():
+    hw = HW()
+    t = roofline_terms(flops=197e12, bytes_accessed=0, collective_bytes=0, hw=hw)
+    assert t["bottleneck"] == "compute" and abs(t["compute_s"] - 1.0) < 1e-9
+    assert t["roofline_fraction"] == 1.0
+    t = roofline_terms(flops=197e10, bytes_accessed=819e9, collective_bytes=0,
+                       hw=hw)
+    assert t["bottleneck"] == "memory"
+    np.testing.assert_allclose(t["roofline_fraction"], 0.01)
+    t = roofline_terms(flops=0, bytes_accessed=0, collective_bytes=50e9, hw=hw)
+    assert t["bottleneck"] == "collective"

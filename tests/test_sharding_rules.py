@@ -1,0 +1,130 @@
+"""Sharding-rule unit tests: divisibility fallbacks, scan-dim padding,
+cache layouts — pure spec computation, no devices needed."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import (MeshConfig, ShapeConfig, get_model_config,
+                          get_smoke_config)
+from repro.models import build_model, cache_specs, param_specs
+from repro.models.api import Ctx
+from repro.train import sharding as S
+
+MESH = MeshConfig(multi_pod=False, pod=1, data=16, model=16, fsdp=True)
+
+
+def _specs_for(arch, ctx=None):
+    cfg = get_model_config(arch)
+    model = build_model(cfg, ctx or Ctx())
+    shapes = param_specs(model)
+    return cfg, shapes, S.param_pspecs(cfg, shapes, MESH)
+
+
+def _leaf(tree, *path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def test_dense_layer_tp_fsdp():
+    cfg, shapes, specs = _specs_for("internlm2-20b")
+    # scanned stacked params get a leading None
+    wq = _leaf(specs, "units", "s0", "attn", "wq")
+    assert wq == P(None, "data", "model")
+    wo = _leaf(specs, "units", "s0", "attn", "wo")
+    assert wo == P(None, "model", "data")
+    norm = _leaf(specs, "units", "s0", "norm1")
+    assert norm == P(None, None)
+
+
+def test_vocab_tensors_model_only():
+    """embed/lm_head never take FSDP (batch-unsharding hazard, DESIGN.md §9)."""
+
+    for arch in ("internlm2-20b", "gemma2-2b"):
+        cfg, shapes, specs = _specs_for(arch)
+        assert specs["embed"] == P("model", None)
+        if "lm_head" in specs:
+            assert specs["lm_head"] == P(None, "model")
+
+
+def test_nondivisible_dims_replicate():
+    # qwen kv width 40*128 = 5120 divides 16; heads 40 do not — the flat
+    # width rule still applies (5120 % 16 == 0)
+    cfg, shapes, specs = _specs_for("qwen1.5-32b")
+    wk = _leaf(specs, "units", "s0", "attn", "wk")
+    assert wk == P(None, "data", "model")
+    # granite mqa wk width = 1*128 = 128, divisible -> sharded; bias too
+    cfg, shapes, specs = _specs_for("granite-34b")
+    assert _leaf(specs, "units", "s0", "attn", "wk") == P(None, "data", "model")
+
+
+def test_ssm_head_sharding():
+    cfg, shapes, specs = _specs_for("mamba2-780m")
+    assert _leaf(specs, "units", "s0", "ssm", "w_x") == P(None, "data", "model")
+    assert _leaf(specs, "units", "s0", "ssm", "A_log") == P(None, "model")
+    assert _leaf(specs, "units", "s0", "ssm", "w_B") == P(None, "data", None)
+    assert _leaf(specs, "units", "s0", "ssm", "out_proj") == P(None, "model", "data")
+
+
+def test_moe_expert_parallel_specs():
+    ctx = Ctx(ep_pad_to=16)
+    cfg, shapes, specs = _specs_for("deepseek-v2-lite-16b", ctx)
+    wi = _leaf(specs, "units", "s0", "moe", "wi_gate")
+    assert wi == P(None, "model", "data", None)     # experts over model (EP)
+    router = _leaf(specs, "units", "s0", "moe", "router")
+    assert router == P(None, "data", None)
+    # granite-moe: 40 experts pad to 48, divisible -> EP as well
+    cfg, shapes, specs = _specs_for("granite-moe-3b-a800m", ctx)
+    wi = _leaf(specs, "units", "s0", "moe", "wi_gate")
+    assert wi.index(0) is None or True
+    assert _leaf(shapes, "units", "s0", "moe", "wi_gate").shape[1] == 48
+    assert wi == P(None, "model", "data", None)
+
+
+def test_cache_specs_decode_head_fallback_to_seq():
+    """qwen (kv=40) and internlm (kv=8) caches shard L over model."""
+
+    for arch, expect_seq in (("qwen1.5-32b", True), ("internlm2-20b", True),
+                             ("internvl2-76b", True)):
+        cfg = get_model_config(arch)
+        model = build_model(cfg, Ctx())
+        shape = ShapeConfig("d", 32768, 128, "decode")
+        cshapes = cache_specs(model, 128, 32768)
+        cspecs = S.cache_pspecs_tree(cfg, shape, MESH, cshapes)
+        k_spec = jax.tree.leaves(
+            cspecs, is_leaf=lambda x: isinstance(x, P))[0]
+        # (n_scan, B, H, L, hd): batch over data; L over model
+        assert k_spec[1] in ("data", ("data",))
+        assert k_spec[3] == "model", k_spec
+
+
+def test_cache_specs_long_context_b1():
+    cfg = get_model_config("zamba2-2.7b")
+    model = build_model(cfg, Ctx())
+    shape = ShapeConfig("l", 524288, 1, "decode")
+    cshapes = cache_specs(model, 1, 524288)
+    cspecs = S.cache_pspecs_tree(cfg, shape, MESH, cshapes)
+    kv_k = cspecs["kv"].k                        # (n_units, B, H, L, hd)
+    assert kv_k[2] == "model"                    # 32 kv heads / 16
+    assert kv_k[3] == "data"                     # sequence over data
+    ssm_h = cspecs["ssm"].h                      # (n_units, k, B, nh, hd, ds)
+    assert "model" in tuple(ssm_h)
+
+
+def test_every_arch_every_leaf_gets_valid_spec():
+    for arch in ("internlm2-20b", "gemma2-2b", "whisper-large-v3",
+                 "zamba2-2.7b", "mamba2-780m", "deepseek-v2-lite-16b"):
+        cfg, shapes, specs = _specs_for(arch)
+        flat_shapes = jax.tree_util.tree_leaves(shapes)
+        flat_specs = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_shapes) == len(flat_specs)
+        for sh, sp in zip(flat_shapes, flat_specs):
+            assert len(sp) <= len(sh.shape), (arch, sh.shape, sp)
+            for dim, ax in zip(sh.shape, tuple(sp) + (None,) * 10):
+                if ax in ("model",):
+                    assert dim % 16 == 0, (arch, sh.shape, sp)
+                if ax == "data":
+                    assert dim % 16 == 0, (arch, sh.shape, sp)

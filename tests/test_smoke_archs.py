@@ -1,0 +1,66 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train step
+on CPU, asserting output shapes + no NaNs (full configs are exercised only
+via the allocation-free dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ARCHS, get_smoke_config
+from repro.models import build_model
+from repro.models.api import Ctx
+
+
+def _batch(cfg, key, B=2, L=16):
+    ks = jax.random.split(key, 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, L), 0, cfg.vocab_size),
+        "targets": jax.random.randint(ks[1], (B, L), 0, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            ks[3], (B, cfg.num_patch_tokens, 1024), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    ctx = Ctx(attn_impl="ref", cache_dtype=jnp.float32)
+    model = build_model(cfg, ctx)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    # one SGD step, loss must stay finite and params keep shapes
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+    jax.tree.map(lambda a, b: np.testing.assert_equal(a.shape, b.shape),
+                 params, new_params)
+    loss2 = model.loss(new_params, batch)
+    assert np.isfinite(float(loss2)), f"{arch}: non-finite post-step loss"
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.all(jnp.isfinite(g))), (
+            f"{arch}: non-finite grad at {jax.tree_util.keystr(path)}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    ctx = Ctx(attn_impl="ref", cache_dtype=jnp.float32)
+    model = build_model(cfg, ctx)
+    params = model.init(jax.random.PRNGKey(0))
+    B, L = 2, 16
+    batch = _batch(cfg, jax.random.PRNGKey(1), B, L)
+    extra = cfg.num_patch_tokens if cfg.family == "vlm" else 0
+    logits, cache = model.prefill(params, batch, L + extra + 8)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: prefill NaN"
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = model.decode(params, cache, tok, L + extra)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2))), f"{arch}: decode NaN"

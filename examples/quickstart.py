@@ -26,6 +26,9 @@ def main():
     ap.add_argument("--n", type=int, default=400)
     ap.add_argument("--grid", type=int, nargs=2, default=(4, 4))
     ap.add_argument("--rank", type=int, default=5)
+    ap.add_argument("--layout", default="dense", choices=["dense", "sparse"],
+                    help="sparse runs the f-terms on the padded-COO store "
+                         "(nnz-proportional compute)")
     args = ap.parse_args()
 
     cfg = GossipMCConfig(m=args.m, n=args.n, p=args.grid[0], q=args.grid[1],
@@ -41,10 +44,12 @@ def main():
     log = lambda t, c: print(f"  t={t:>8d}  cost={c:.4e}")
     if args.mode == "sequential":
         st, _ = sequential.fit(prob, spec, cfg, key, num_iters=40_000,
-                               eval_every=8_000, callback=log)
+                               eval_every=8_000, callback=log,
+                               layout=args.layout)
     else:
         st, _ = waves.fit(prob, spec, cfg, key, num_rounds=2_500,
-                          eval_every=500, mode=args.mode, callback=log)
+                          eval_every=500, mode=args.mode, callback=log,
+                          layout=args.layout)
 
     du, dw = assemble.consensus_error(st.U, st.W)
     u, w = assemble.assemble(st.U, st.W, spec)

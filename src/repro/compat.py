@@ -1,0 +1,52 @@
+"""Version-compat shims for jax APIs that moved/renamed across releases.
+
+The codebase targets current jax (``jax.shard_map``, ``lax.axis_size``,
+``AxisType``-typed meshes, ``pltpu.CompilerParams``); this module lets it
+run on older jaxlibs (e.g. 0.4.x) where those names live elsewhere.  Keep
+every cross-version access here so call sites stay clean.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:  # jax < 0.5: experimental home, `check_rep` spelling
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a (possibly composite) mapped axis."""
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    # psum of the constant 1 constant-folds to the axis size at trace time
+    return jax.lax.psum(1, axis_name)
+
+
+def pallas_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` under its per-release name."""
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, TypeError):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

@@ -29,10 +29,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size as _compat_axis_size, shard_map as _shard_map
 from repro.config import GossipMCConfig
 from repro.core import objective as obj
 from repro.core.state import Problem, State
 from repro.core import compress as C
+from repro.sparse.store import SparseProblem
 
 
 class HaloState(NamedTuple):
@@ -65,7 +67,7 @@ def _shift(x, axis_name, mesh_size, direction: int):
 
 
 def _axis_size(axis_name) -> int:
-    return jax.lax.axis_size(axis_name)
+    return _compat_axis_size(axis_name)
 
 
 def exchange_halos(U, W, row_axes, col_axes, compression="none",
@@ -142,12 +144,17 @@ def make_gossip_step(
     topk_fraction: float = 0.25,
     use_kernel: bool = False,
     steps_per_call: int = 1,
+    layout: str = "dense",
 ):
     """Build the jitted distributed gossip round.
 
     Returns (step_fn, in_shardings) where
     ``step_fn(problem, carry) -> carry`` advances ``steps_per_call`` rounds.
     Arrays are sharded P(row_axes, col_axes) on their leading (p, q) dims.
+
+    ``layout="sparse"`` expects a ``SparseProblem`` (padded-COO store) and
+    runs each round's f-gradients on nnz-proportional compute; the halo
+    exchange is identical in both layouts — only factor edges ever travel.
     """
 
     p, q = spec_pq
@@ -195,7 +202,11 @@ def make_gossip_step(
 
     pspec2 = P(row_axes, col_axes)
     rep = P()
-    problem_spec = Problem(pspec2, pspec2)
+    if layout == "sparse":
+        # entry tensors are (p, q, E) / (p, q): leading dims shard as usual
+        problem_spec = SparseProblem(pspec2, pspec2, pspec2, pspec2, pspec2)
+    else:
+        problem_spec = Problem(pspec2, pspec2)
     state_spec = State(pspec2, pspec2, rep)
     halo_spec = HaloState(
         P(row_axes), P(row_axes), P(col_axes), P(col_axes)
@@ -205,7 +216,7 @@ def make_gossip_step(
     )
 
     step = jax.jit(
-        jax.shard_map(
+        _shard_map(
             shard_body,
             mesh=mesh,
             in_specs=(problem_spec, carry_spec),
@@ -216,7 +227,7 @@ def make_gossip_step(
     return step, (problem_spec, carry_spec)
 
 
-def init_carry(state: State, spec_pq_local_shapes) -> GossipCarry:
+def init_carry(state: State) -> GossipCarry:
     """Zero halos + zero error feedback (shapes are the *global* array
     shapes; shard_map slices them)."""
 
@@ -237,9 +248,12 @@ def init_carry(state: State, spec_pq_local_shapes) -> GossipCarry:
     )
 
 
-def distributed_cost(mesh, problem: Problem, state: State, lam: float,
-                     row_axes="data", col_axes="model"):
-    """Σ f + λ‖·‖² with a single final psum (evaluation only)."""
+def distributed_cost(mesh, problem: Problem | SparseProblem, state: State,
+                     lam: float, row_axes="data", col_axes="model"):
+    """Σ f + λ‖·‖² with a single final psum (evaluation only).
+
+    Works for both layouts: the local tile cost dispatches on the problem
+    pytree (dense tensors vs padded-COO store)."""
 
     pspec2 = P(row_axes, col_axes)
 
@@ -247,16 +261,21 @@ def distributed_cost(mesh, problem: Problem, state: State, lam: float,
     for a in (row_axes, col_axes):
         axes += tuple(a) if isinstance(a, (tuple, list)) else (a,)
 
-    def local_cost(xb, maskb, U, W):
-        c = obj.total_report_cost(xb, maskb, U, W, lam)
+    if isinstance(problem, SparseProblem):
+        problem_spec = SparseProblem(pspec2, pspec2, pspec2, pspec2, pspec2)
+    else:
+        problem_spec = Problem(pspec2, pspec2)
+
+    def local_cost(prob, U, W):
+        c = obj.total_cost(prob, U, W, lam)
         return jax.lax.psum(c, axes)
 
     fn = jax.jit(
-        jax.shard_map(
+        _shard_map(
             local_cost, mesh=mesh,
-            in_specs=(pspec2, pspec2, pspec2, pspec2),
+            in_specs=(problem_spec, pspec2, pspec2),
             out_specs=P(),
             check_vma=False,
         )
     )
-    return fn(problem.xb, problem.maskb, state.U, state.W)
+    return fn(problem, state.U, state.W)

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.masked_factor_grad import ops as mfg_ops
+from repro.sparse import objective as sparse_obj
+from repro.sparse.store import SparseProblem
 
 
 def block_residual(x, mask, u, w):
@@ -57,6 +59,15 @@ def total_report_cost(xb, maskb, U, W, lam: float):
 
     per = jax.vmap(jax.vmap(per_block))(xb, maskb, U, W)
     return jnp.sum(per)
+
+
+def total_cost(problem, U, W, lam: float):
+    """Layout-dispatching Table-2 cost: dense ``Problem`` tensors or the
+    padded-COO ``SparseProblem`` store (nnz-proportional)."""
+
+    if isinstance(problem, SparseProblem):
+        return sparse_obj.total_report_cost_sparse(problem, U, W, lam)
+    return total_report_cost(problem.xb, problem.maskb, U, W, lam)
 
 
 def consensus_costs(U, W):
@@ -114,6 +125,15 @@ def structure_grads(
         lambda x, m, u, w: f_grads(x, m, u, w, use_kernel=use_kernel)
     )(x3, m3, u3, w3)
     del f
+    return _finish_structure_grads(
+        gu_f, gw_f, u3, w3, cf3, cu_pair, cw_pair, rho, lam
+    )
+
+
+def _finish_structure_grads(gu_f, gw_f, u3, w3, cf3, cu_pair, cw_pair, rho, lam):
+    """Shared tail of the structure gradient: λ-reg + Fig.-2 normalization +
+    the two consensus pulls (identical for dense and sparse f-parts)."""
+
     # f + λ reg, per-block normalized
     gu = cf3[:, None, None] * (gu_f + 2.0 * lam * u3)
     gw = cf3[:, None, None] * (gw_f + 2.0 * lam * w3)
@@ -126,6 +146,26 @@ def structure_grads(
     gw = gw.at[0].add(cw_pair[0] * dw)
     gw = gw.at[1].add(-cw_pair[1] * dw)
     return gu, gw
+
+
+@partial(jax.jit, static_argnames=("rho", "lam", "use_kernel"))
+def structure_grads_sparse(
+    rows3, cols3, vals3, valid3, u3, w3, cf3, cu_pair, cw_pair,
+    rho: float, lam: float, use_kernel: bool = False,
+):
+    """Sparse-layout twin of :func:`structure_grads`: the three blocks' f
+    gradients come from their padded-COO entry lists (O(nnz·r)); the
+    consensus/reg/normalization tail is byte-identical."""
+
+    f, gu_f, gw_f = jax.vmap(
+        lambda rows, cols, vals, valid, u, w: sparse_obj.f_grads_sparse(
+            rows, cols, vals, valid, u, w, use_kernel=use_kernel
+        )
+    )(rows3, cols3, vals3, valid3, u3, w3)
+    del f
+    return _finish_structure_grads(
+        gu_f, gw_f, u3, w3, cf3, cu_pair, cw_pair, rho, lam
+    )
 
 
 def gamma(t, a: float, b: float):

@@ -21,6 +21,7 @@ from repro.config import GossipMCConfig
 from repro.core import grid as G
 from repro.core import objective as obj
 from repro.core.state import Problem, State, Tables, build_tables
+from repro.sparse.store import SparseProblem, ensure_layout
 
 
 @functools.partial(jax.jit, static_argnames=("rho", "lam", "a", "b", "use_kernel"))
@@ -41,15 +42,21 @@ def sgd_structure_step(
     s = jax.random.randint(key, (), 0, tables.blocks.shape[0])
     idx = tables.blocks[s]                      # (3, 2)
     bi, bj = idx[:, 0], idx[:, 1]
-    x3 = problem.xb[bi, bj]
-    m3 = problem.maskb[bi, bj]
     u3 = state.U[bi, bj]
     w3 = state.W[bi, bj]
-    gu3, gw3 = obj.structure_grads(
-        x3, m3, u3, w3,
-        tables.cf[s], tables.cu[s], tables.cw[s],
-        rho=rho, lam=lam, use_kernel=use_kernel,
-    )
+    if isinstance(problem, SparseProblem):      # layout="sparse": O(nnz) f-part
+        gu3, gw3 = obj.structure_grads_sparse(
+            problem.rows[bi, bj], problem.cols[bi, bj],
+            problem.vals[bi, bj], problem.valid[bi, bj], u3, w3,
+            tables.cf[s], tables.cu[s], tables.cw[s],
+            rho=rho, lam=lam, use_kernel=use_kernel,
+        )
+    else:
+        gu3, gw3 = obj.structure_grads(
+            problem.xb[bi, bj], problem.maskb[bi, bj], u3, w3,
+            tables.cf[s], tables.cu[s], tables.cw[s],
+            rho=rho, lam=lam, use_kernel=use_kernel,
+        )
     lr = obj.gamma(state.t.astype(jnp.float32), a, b)
     U = state.U.at[bi, bj].add(-lr * gu3)
     W = state.W.at[bi, bj].add(-lr * gw3)
@@ -83,7 +90,7 @@ def run_chunk(
 
 
 def fit(
-    problem: Problem,
+    problem: Problem | SparseProblem,
     spec: G.GridSpec,
     cfg: GossipMCConfig,
     key: jax.Array,
@@ -93,12 +100,18 @@ def fit(
     callback: Callable[[int, float], None] | None = None,
     state: State | None = None,
     use_kernel: bool = False,
+    layout: str | None = None,
 ) -> tuple[State, list[tuple[int, float]]]:
     """Run Algorithm 1 for ``num_iters`` iterations, logging the paper's
-    Table-2 cost every ``eval_every`` iterations."""
+    Table-2 cost every ``eval_every`` iterations.
+
+    ``layout="sparse"`` runs every f-term on the padded-COO store
+    (nnz-proportional); a dense ``Problem`` is converted on entry.  The
+    default infers the layout from the problem type."""
 
     from repro.core.state import init_state
 
+    problem = ensure_layout(problem, layout)
     structures = G.enumerate_structures(spec.p, spec.q)
     tables = build_tables(spec.p, spec.q, structures)
     if state is None:
@@ -112,9 +125,7 @@ def fit(
         key, ck = jax.random.split(key)
         state = run_chunk(problem, state, tables, ck, chunk, cfg, use_kernel)
         done += chunk
-        cost = float(
-            obj.total_report_cost(problem.xb, problem.maskb, state.U, state.W, cfg.lam)
-        )
+        cost = float(obj.total_cost(problem, state.U, state.W, cfg.lam))
         history.append((done, cost))
         if callback:
             callback(done, cost)

@@ -26,6 +26,8 @@ from repro.config import GossipMCConfig
 from repro.core import grid as G
 from repro.core import objective as obj
 from repro.core.state import Problem, State, Tables, build_tables
+from repro.sparse import objective as sparse_obj
+from repro.sparse.store import SparseProblem, ensure_layout
 
 
 def wave_tables(p: int, q: int) -> list[Tables]:
@@ -48,16 +50,29 @@ def wave_step(
 
     idx = tables.blocks                               # (S, 3, 2)
     bi, bj = idx[..., 0], idx[..., 1]                 # (S, 3)
-    x3 = problem.xb[bi, bj]                           # (S, 3, mb, nb)
-    m3 = problem.maskb[bi, bj]
     u3 = state.U[bi, bj]
     w3 = state.W[bi, bj]
-    grad = jax.vmap(
-        lambda x, m, u, w, cf, cu, cw: obj.structure_grads(
-            x, m, u, w, cf, cu, cw, rho=rho, lam=lam, use_kernel=use_kernel
+    if isinstance(problem, SparseProblem):            # layout="sparse"
+        grad = jax.vmap(
+            lambda rows, cols, vals, valid, u, w, cf, cu, cw:
+            obj.structure_grads_sparse(
+                rows, cols, vals, valid, u, w, cf, cu, cw,
+                rho=rho, lam=lam, use_kernel=use_kernel,
+            )
         )
-    )
-    gu3, gw3 = grad(x3, m3, u3, w3, tables.cf, tables.cu, tables.cw)
+        gu3, gw3 = grad(
+            problem.rows[bi, bj], problem.cols[bi, bj],
+            problem.vals[bi, bj], problem.valid[bi, bj],
+            u3, w3, tables.cf, tables.cu, tables.cw,
+        )
+    else:
+        grad = jax.vmap(
+            lambda x, m, u, w, cf, cu, cw: obj.structure_grads(
+                x, m, u, w, cf, cu, cw, rho=rho, lam=lam, use_kernel=use_kernel
+            )
+        )
+        gu3, gw3 = grad(problem.xb[bi, bj], problem.maskb[bi, bj],
+                        u3, w3, tables.cf, tables.cu, tables.cw)
     lr = obj.gamma(state.t.astype(jnp.float32), a, b)
     # blocks within a wave are pairwise distinct -> conflict-free scatter
     U = state.U.at[bi, bj].add(-lr * gu3)
@@ -70,36 +85,26 @@ def wave_step(
 # ---------------------------------------------------------------------------
 
 
-def _pad_axis_diff(A: jax.Array, axis: int) -> tuple[jax.Array, jax.Array]:
-    """Forward/backward neighbour differences along a block-grid axis with
-    zero at the boundary.  Returns (right_pull, left_pull) such that
-    grad_consensus = 2ρ (right_pull + left_pull)."""
-
-    d = jnp.diff(A, axis=axis)                  # A[k+1] - A[k]
-    zshape = list(A.shape)
-    zshape[axis] = 1
-    z = jnp.zeros(zshape, A.dtype)
-    fwd = jnp.concatenate([-d, z], axis=axis)   # A[k] - A[k+1]  (pair to the right)
-    bwd = jnp.concatenate([z, d], axis=axis)    # A[k] - A[k-1]  (pair to the left)
-    return fwd, bwd
-
-
 @functools.partial(jax.jit, static_argnames=("rho", "lam", "use_kernel"))
 def full_gradients(
-    problem: Problem, U: jax.Array, W: jax.Array, *,
+    problem: Problem | SparseProblem, U: jax.Array, W: jax.Array, *,
     rho: float, lam: float, use_kernel: bool = False,
 ):
-    """∇L of the collapsed objective (objective.full_objective)."""
+    """∇L of the collapsed objective (objective.full_objective).
 
+    Accepts either layout; a SparseProblem routes the f-part through the
+    nnz-proportional SDDMM path with identical consensus/reg terms."""
+
+    if isinstance(problem, SparseProblem):
+        return sparse_obj.full_gradients_sparse(
+            problem, U, W, rho=rho, lam=lam, use_kernel=use_kernel
+        )
     _, gu_f, gw_f = jax.vmap(jax.vmap(
         lambda x, m, u, w: obj.f_grads(x, m, u, w, use_kernel=use_kernel)
     ))(problem.xb, problem.maskb, U, W)
-    gU = gu_f + 2.0 * lam * U
-    gW = gw_f + 2.0 * lam * W
-    fwd, bwd = _pad_axis_diff(U, axis=1)        # U consensus along grid cols
-    gU = gU + 2.0 * rho * (fwd + bwd)
-    fwd, bwd = _pad_axis_diff(W, axis=0)        # W consensus along grid rows
-    gW = gW + 2.0 * rho * (fwd + bwd)
+    # consensus stencil shared with the sparse path (sparse.objective)
+    gU = gu_f + 2.0 * lam * U + 2.0 * rho * sparse_obj.consensus_pulls(U, axis=1)
+    gW = gw_f + 2.0 * lam * W + 2.0 * rho * sparse_obj.consensus_pulls(W, axis=0)
     return gU, gW
 
 
@@ -114,7 +119,8 @@ def full_gradient_step(
     oscillate — sequential/wave modes never stack pairs, full mode does)."""
 
     n_struct = 2 * (state.U.shape[0] - 1) * (state.U.shape[1] - 1)
-    gU, gW = full_gradients(problem, state.U, state.W, rho=rho * 0.5, lam=lam)
+    gU, gW = full_gradients(problem, state.U, state.W, rho=rho * 0.5, lam=lam,
+                            use_kernel=use_kernel)
     lr = obj.gamma(state.t.astype(jnp.float32), a, b)
     return State(
         state.U - lr * gU, state.W - lr * gW, state.t + n_struct
@@ -138,7 +144,7 @@ def full_gd_rounds(problem: Problem, state: State, *, rounds: int,
 
 
 def fit(
-    problem: Problem,
+    problem: Problem | SparseProblem,
     spec: G.GridSpec,
     cfg: GossipMCConfig,
     key: jax.Array,
@@ -149,16 +155,20 @@ def fit(
     callback: Callable[[int, float], None] | None = None,
     state: State | None = None,
     use_kernel: bool = False,
+    layout: str | None = None,
 ) -> tuple[State, list[tuple[int, float]]]:
     """Run ``num_rounds`` rounds of wave (or full-GD) updates.
 
     One round ≈ num_structures sequential iterations of Algorithm 1; the
     cost history is reported against the equivalent sequential iteration
     count ``t`` so curves are comparable with the paper's Table 2.
+    ``layout="sparse"`` runs all f-terms on the padded-COO store; the
+    default infers the layout from the problem type.
     """
 
     from repro.core.state import init_state
 
+    problem = ensure_layout(problem, layout)
     tables = wave_tables(spec.p, spec.q)
     if state is None:
         key, ik = jax.random.split(key)
@@ -185,11 +195,7 @@ def fit(
         key, rk = jax.random.split(key)
         state = one_round(state, rk)
         if (rd + 1) % eval_every == 0 or rd == num_rounds - 1:
-            cost = float(
-                obj.total_report_cost(
-                    problem.xb, problem.maskb, state.U, state.W, cfg.lam
-                )
-            )
+            cost = float(obj.total_cost(problem, state.U, state.W, cfg.lam))
             history.append((int(state.t), cost))
             if callback:
                 callback(int(state.t), cost)

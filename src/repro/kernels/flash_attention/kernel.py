@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
+
 _LANES = 128
 _NEG_INF = -1e30
 
@@ -130,7 +132,7 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, _LANES), jnp.float32),   # running denom
             pltpu.VMEM((bq, D), jnp.float32),        # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,4 @@
+from repro.kernels.sddmm.ops import sddmm_factor_grad
+from repro.kernels.sddmm.ref import sddmm_factor_grad_ref, sddmm_residuals
+
+__all__ = ["sddmm_factor_grad", "sddmm_factor_grad_ref", "sddmm_residuals"]

@@ -1,0 +1,94 @@
+"""Jitted public wrapper around the SDDMM Pallas kernel.
+
+Pads the entry list to a multiple of the entry tile (padding slots get
+valid=0 so they contribute nothing), pads r to the 128-lane boundary and
+M/N to sublane multiples (zero factor rows whose gradients are exactly zero
+and are sliced away), picks interpret mode automatically off-TPU, and falls
+back to the gather-based XLA reference whenever the one-hot working set
+(resident U/W/gU/gW + the (be×M)/(be×N) one-hot tiles) would blow the VMEM
+budget — there the reference's O(nnz·r) gather path wins anyway.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sddmm.kernel import sddmm_factor_grad_pallas
+from repro.kernels.sddmm.ref import sddmm_factor_grad_ref
+
+_LANE = 128
+_SUBLANE = 8
+# VMEM budget for the resident factors/accumulators + one-hot tiles.
+_MAX_VMEM_BYTES = 10 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad_rows(a, target):
+    pm = target - a.shape[0]
+    if pm:
+        a = jnp.pad(a, ((0, pm), (0, 0)))
+    return a
+
+
+@functools.partial(
+    jax.jit, static_argnames=("be", "interpret", "force_kernel")
+)
+def sddmm_factor_grad(
+    rows,
+    cols,
+    vals,
+    valid,
+    u,
+    w,
+    *,
+    be: int = 512,
+    interpret: bool | None = None,
+    force_kernel: bool = False,
+):
+    """(loss, gU, gW) from one block's padded COO entries — fused Pallas path.
+
+    loss = Σ_k valid_k (vals_k − ⟨U[rows_k], W[cols_k]⟩)²,
+    gU/gW are the −2eW / −2eᵀU scatter-adds (see ref.py).
+    """
+
+    E = rows.shape[0]
+    M, r = u.shape
+    N = w.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    r_pad = _round_up(max(r, _LANE), _LANE)
+    m_pad = _round_up(M, _SUBLANE)
+    n_pad = _round_up(N, _SUBLANE)
+    be_eff = min(be, _round_up(max(E, 1), _LANE))
+    e_pad = _round_up(max(E, 1), be_eff)
+
+    vmem = 2 * (m_pad + n_pad) * r_pad * 4 + be_eff * (m_pad + n_pad) * 4
+    if vmem > _MAX_VMEM_BYTES and not force_kernel:
+        # resident one-hot layout does not fit — gather fallback is the
+        # nnz-proportional-FLOPs path and XLA handles it well.
+        return sddmm_factor_grad_ref(rows, cols, vals, valid, u, w)
+
+    def pad_e(a, fill):
+        pe = e_pad - E
+        if pe:
+            a = jnp.pad(a, (0, pe), constant_values=fill)
+        return a[None, :]                       # (1, E) lane-aligned layout
+
+    rp = pad_e(rows.astype(jnp.int32), 0)
+    cp = pad_e(cols.astype(jnp.int32), 0)
+    vp = pad_e(vals.astype(jnp.float32), 0.0)
+    mp = pad_e(valid.astype(jnp.float32), 0.0)
+    up = _pad_rows(jnp.pad(u.astype(jnp.float32), ((0, 0), (0, r_pad - r))), m_pad)
+    wp = _pad_rows(jnp.pad(w.astype(jnp.float32), ((0, 0), (0, r_pad - r))), n_pad)
+
+    loss, gu, gw = sddmm_factor_grad_pallas(
+        rp, cp, vp, mp, up, wp, be=be_eff, interpret=interpret
+    )
+    return loss, gu[:M, :r].astype(u.dtype), gw[:N, :r].astype(w.dtype)

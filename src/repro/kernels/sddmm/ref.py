@@ -1,0 +1,47 @@
+"""Gather-based XLA reference for the sparse (SDDMM) factor gradient.
+
+Operates on one block's padded COO entry list.  Entries: intra-block
+``rows``/``cols`` (int32), observed values ``vals`` and a ``valid`` 0/1 mask
+(padding slots carry valid=0 and contribute nothing).  With factors
+U (M×r), W (N×r):
+
+    e_k     = valid_k · (vals_k − ⟨U[rows_k], W[cols_k]⟩)     (residual at entry k)
+    f       = Σ_k e_k²
+    gU      = −2 · scatter_add_rows(e_k · W[cols_k])
+    gW      = −2 · scatter_add_cols(e_k · U[rows_k])
+
+This is algebraically identical to the dense masked path
+(``masked_factor_grad_ref``) restricted to observed entries, but costs
+O(nnz·r) compute and O(nnz) memory traffic instead of O(M·N·r) / O(M·N).
+It doubles as the XLA fallback on backends where the Pallas kernel does not
+pay off.  All accumulation in float32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sddmm_residuals(rows, cols, vals, valid, u, w):
+    """Residuals at the observed entries only: (E,) float32."""
+
+    uf = u.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    pred = jnp.sum(uf[rows] * wf[cols], axis=-1)
+    return valid.astype(jnp.float32) * (vals.astype(jnp.float32) - pred)
+
+
+def sddmm_factor_grad_ref(rows, cols, vals, valid, u, w):
+    """(loss, gU, gW) from the padded entry list; nnz-proportional."""
+
+    uf = u.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    ue = uf[rows]                                   # (E, r) gather
+    we = wf[cols]
+    pred = jnp.sum(ue * we, axis=-1)
+    e = valid.astype(jnp.float32) * (vals.astype(jnp.float32) - pred)
+    loss = jnp.sum(e * e)
+    d = -2.0 * e[:, None]
+    gu = jnp.zeros(uf.shape, jnp.float32).at[rows].add(d * we)
+    gw = jnp.zeros(wf.shape, jnp.float32).at[cols].add(d * ue)
+    return loss, gu.astype(u.dtype), gw.astype(w.dtype)

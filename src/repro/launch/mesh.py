@@ -7,9 +7,7 @@ import this under a 1-device runtime without side effects).
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
-
+from repro.compat import make_mesh
 from repro.config import MeshConfig
 
 
@@ -18,8 +16,7 @@ def make_production_mesh(*, multi_pod: bool = False):
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_from_config(cfg: MeshConfig):
@@ -29,8 +26,7 @@ def make_mesh_from_config(cfg: MeshConfig):
     else:
         shape = (cfg.data, cfg.model)
         axes = ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def single_pod_config(**kw) -> MeshConfig:

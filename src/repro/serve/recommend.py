@@ -1,0 +1,154 @@
+"""Top-k recommendation serving over completed gossip factors.
+
+After training, ``assemble`` collapses the (p, q) block factors into global
+U (m×r) and W (n×r).  This module turns those into a serving index and
+answers "top-k unseen items for these users" in fixed-shape jitted batches:
+
+    scores   = U[user_batch] @ Wᵀ                   (B×n, one MXU matmul)
+    masked   = scores with each user's seen items at −inf (scatter, 'drop')
+    items    = lax.top_k(masked, k)
+
+The seen-item table is a padded (m, S) int32 ragged list; padding slots
+hold ``n`` (one past the last item id) and are dropped by the scatter's
+out-of-bounds mode, so no per-user bucketing logic exists at serve time.
+``RecommendService`` adds fixed-batch chunking (pad the tail batch, keep one
+jit cache entry) — the shape discipline that a production front-end needs.
+
+Throughput bench: ``benchmarks/serve_recommend.py``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assemble import assemble
+from repro.core.grid import GridSpec
+
+_SEEN_PAD_QUANTUM = 16
+
+
+class RecommendIndex(NamedTuple):
+    """Immutable serving state (device-resident)."""
+
+    u: jax.Array      # (m, r) float32 — user factors
+    w: jax.Array      # (n, r) float32 — item factors
+    seen: jax.Array   # (m, S) int32 — items to exclude; pad value == n
+
+
+def build_seen_table(train_mask: np.ndarray, num_items: int) -> np.ndarray:
+    """Padded per-user seen-item lists from a 0/1 mask.  Pad value is
+    ``num_items`` (out of range → dropped by the serve-time scatter)."""
+
+    m = train_mask.shape[0]
+    rows, cols = np.nonzero(np.asarray(train_mask)[:, :num_items])
+    counts = np.bincount(rows, minlength=m)
+    S = int(counts.max()) if len(rows) else 0
+    S = max(_SEEN_PAD_QUANTUM,
+            (S + _SEEN_PAD_QUANTUM - 1) // _SEEN_PAD_QUANTUM * _SEEN_PAD_QUANTUM)
+    seen = np.full((m, S), num_items, np.int32)
+    # np.nonzero yields row-major order, so entries of user u occupy the
+    # contiguous range [starts[u], starts[u]+counts[u])
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    seen[rows, np.arange(len(rows)) - starts[rows]] = cols
+    return seen
+
+
+def build_index(
+    U: jax.Array,
+    W: jax.Array,
+    spec: GridSpec,
+    train_mask: np.ndarray | None = None,
+    num_users: int | None = None,
+    num_items: int | None = None,
+) -> RecommendIndex:
+    """Assemble block factors and attach the seen-item exclusion table.
+
+    ``num_users``/``num_items`` trim grid padding (pad_to_grid rows/cols)
+    back to the true matrix shape.
+    """
+
+    u, w = assemble(U, W, spec)
+    m = num_users if num_users is not None else spec.m
+    n = num_items if num_items is not None else spec.n
+    u = jnp.asarray(u[:m], jnp.float32)
+    w = jnp.asarray(w[:n], jnp.float32)
+    if train_mask is not None:
+        seen = build_seen_table(np.asarray(train_mask)[:m], n)
+    else:
+        seen = np.full((m, _SEEN_PAD_QUANTUM), n, np.int32)
+    return RecommendIndex(u, w, jnp.asarray(seen))
+
+
+@partial(jax.jit, static_argnames=("k", "exclude_seen"))
+def recommend_topk(
+    index: RecommendIndex, user_ids: jax.Array, *,
+    k: int, exclude_seen: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(items, scores) of shape (B, k) for a batch of user ids."""
+
+    if k > index.w.shape[0]:
+        raise ValueError(
+            f"k={k} exceeds catalog size n={index.w.shape[0]}"
+        )
+    scores = index.u[user_ids] @ index.w.T                  # (B, n)
+    if exclude_seen:
+        b = user_ids.shape[0]
+        seen = index.seen[user_ids]                         # (B, S)
+        scores = scores.at[jnp.arange(b)[:, None], seen].set(
+            -jnp.inf, mode="drop"
+        )
+    scores, items = jax.lax.top_k(scores, k)
+    return items, scores
+
+
+@jax.jit
+def score_pairs(index: RecommendIndex, user_ids, item_ids):
+    """Pointwise predicted ratings for explicit (user, item) pairs."""
+
+    return jnp.sum(index.u[user_ids] * index.w[item_ids], axis=-1)
+
+
+class RecommendService:
+    """Fixed-batch front end: chunk arbitrary user lists into ``batch``-sized
+    jitted calls (tail padded), so serving hits exactly one compiled shape."""
+
+    def __init__(self, index: RecommendIndex, batch: int = 256, k: int = 10,
+                 exclude_seen: bool = True):
+        self.index = index
+        self.batch = batch
+        self.k = k
+        self.exclude_seen = exclude_seen
+
+    @property
+    def num_users(self) -> int:
+        return self.index.u.shape[0]
+
+    @property
+    def num_items(self) -> int:
+        return self.index.w.shape[0]
+
+    def recommend(self, user_ids) -> tuple[np.ndarray, np.ndarray]:
+        """(items, scores) arrays of shape (len(user_ids), k)."""
+
+        user_ids = np.asarray(user_ids, np.int32)
+        n = len(user_ids)
+        out_items = np.empty((n, self.k), np.int32)
+        out_scores = np.empty((n, self.k), np.float32)
+        for s in range(0, n, self.batch):
+            chunk = user_ids[s : s + self.batch]
+            pad = self.batch - len(chunk)
+            if pad:
+                chunk = np.pad(chunk, (0, pad))
+            items, scores = recommend_topk(
+                self.index, jnp.asarray(chunk),
+                k=self.k, exclude_seen=self.exclude_seen,
+            )
+            take = min(self.batch, n - s)
+            out_items[s : s + take] = np.asarray(items)[:take]
+            out_scores[s : s + take] = np.asarray(scores)[:take]
+        return out_items, out_scores

@@ -1,0 +1,39 @@
+from repro.sparse.store import (
+    DEFAULT_BUCKET,
+    MinibatchStream,
+    SparseProblem,
+    bucketed_capacity,
+    density,
+    ensure_layout,
+    from_blocks,
+    from_dataset,
+    minibatch_grad_scale,
+    sample_minibatch,
+    to_dense,
+)
+from repro.sparse.objective import (
+    f_cost_sparse,
+    f_grads_sparse,
+    full_gradients_sparse,
+    full_objective_sparse,
+    total_report_cost_sparse,
+)
+
+__all__ = [
+    "DEFAULT_BUCKET",
+    "MinibatchStream",
+    "SparseProblem",
+    "bucketed_capacity",
+    "density",
+    "ensure_layout",
+    "from_blocks",
+    "from_dataset",
+    "minibatch_grad_scale",
+    "sample_minibatch",
+    "to_dense",
+    "f_cost_sparse",
+    "f_grads_sparse",
+    "full_gradients_sparse",
+    "full_objective_sparse",
+    "total_report_cost_sparse",
+]

@@ -1,0 +1,214 @@
+"""Padded-COO sparse block store for the gossip grid.
+
+The dense path materializes (p, q, mb, nb) value/mask tensors, so every
+objective/gradient evaluation costs O(m·n) regardless of how sparse the
+ratings are.  MovieLens/Netflix-style workloads are ≤5% dense; this store
+keeps, per grid block, only the observed entries:
+
+    rows  : (p, q, E) int32   — intra-block row index of each entry
+    cols  : (p, q, E) int32   — intra-block col index
+    vals  : (p, q, E) float32 — observed value
+    valid : (p, q, E) float32 — 1 for real entries, 0 for padding
+    nnz   : (p, q)    int32   — real entry count per block
+
+``E`` is the per-block entry capacity: the maximum block nnz rounded up to a
+*bucket* multiple, so recompilation only triggers when occupancy crosses a
+bucket boundary, never per-matrix.  Real entries are stored first; padding
+slots carry rows=cols=0, vals=0, valid=0 and contribute nothing to any sum
+(DESIGN.md §3).  The leading (p, q) axes shard exactly like the dense
+tensors (P(row_axes, col_axes)), so the distributed gossip step reuses its
+halo protocol unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grid as G
+from repro.data.synthetic import MCDataset
+
+DEFAULT_BUCKET = 256
+
+
+class SparseProblem(NamedTuple):
+    """Blockified matrix-completion problem, observed entries only."""
+
+    rows: jax.Array    # (p, q, E) int32
+    cols: jax.Array    # (p, q, E) int32
+    vals: jax.Array    # (p, q, E) float32
+    valid: jax.Array   # (p, q, E) float32
+    nnz: jax.Array     # (p, q) int32
+
+    @property
+    def capacity(self) -> int:
+        return self.rows.shape[-1]
+
+
+def bucketed_capacity(max_nnz: int, bucket: int = DEFAULT_BUCKET) -> int:
+    """Round the largest block nnz up to a bucket multiple (≥ one bucket)."""
+
+    return max(bucket, (max_nnz + bucket - 1) // bucket * bucket)
+
+
+def from_blocks(
+    xb: np.ndarray, maskb: np.ndarray, bucket: int = DEFAULT_BUCKET
+) -> SparseProblem:
+    """Convert blockified dense (p,q,mb,nb) tensors to the padded-COO store."""
+
+    xb = np.asarray(xb)
+    maskb = np.asarray(maskb)
+    p, q, _, _ = xb.shape
+    per: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    max_nnz = 0
+    for i in range(p):
+        for j in range(q):
+            r, c = np.nonzero(maskb[i, j])
+            per.append((r, c, xb[i, j][r, c]))
+            max_nnz = max(max_nnz, len(r))
+    E = bucketed_capacity(max_nnz, bucket)
+    rows = np.zeros((p, q, E), np.int32)
+    cols = np.zeros((p, q, E), np.int32)
+    vals = np.zeros((p, q, E), np.float32)
+    valid = np.zeros((p, q, E), np.float32)
+    nnz = np.zeros((p, q), np.int32)
+    for i in range(p):
+        for j in range(q):
+            r, c, v = per[i * q + j]
+            k = len(r)
+            rows[i, j, :k] = r
+            cols[i, j, :k] = c
+            vals[i, j, :k] = v
+            valid[i, j, :k] = 1.0
+            nnz[i, j] = k
+    return SparseProblem(
+        jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
+        jnp.asarray(valid), jnp.asarray(nnz),
+    )
+
+
+def from_dataset(
+    ds: MCDataset, p: int, q: int, r: int, bucket: int = DEFAULT_BUCKET
+) -> tuple[SparseProblem, G.GridSpec]:
+    """Pad to the grid, blockify, and build the store.  Returns the padded
+    GridSpec alongside (the spec's m/n include grid padding)."""
+
+    x, mask, m, n = G.pad_to_grid(ds.x, ds.train_mask, p, q)
+    spec = G.GridSpec(m, n, p, q, r)
+    xb, maskb = G.blockify(x * mask, mask, spec)
+    return from_blocks(xb, maskb, bucket), spec
+
+
+def to_dense(sp: SparseProblem, mb: int, nb: int) -> tuple[np.ndarray, np.ndarray]:
+    """Back to dense (xb, maskb) block tensors — tests and interop."""
+
+    rows = np.asarray(sp.rows)
+    cols = np.asarray(sp.cols)
+    vals = np.asarray(sp.vals)
+    nnz = np.asarray(sp.nnz)
+    p, q, _ = rows.shape
+    xb = np.zeros((p, q, mb, nb), np.float32)
+    maskb = np.zeros((p, q, mb, nb), np.float32)
+    for i in range(p):
+        for j in range(q):
+            k = int(nnz[i, j])
+            xb[i, j, rows[i, j, :k], cols[i, j, :k]] = vals[i, j, :k]
+            maskb[i, j, rows[i, j, :k], cols[i, j, :k]] = 1.0
+    return xb, maskb
+
+
+def density(sp: SparseProblem, mb: int, nb: int) -> float:
+    return float(jnp.sum(sp.nnz)) / (sp.nnz.shape[0] * sp.nnz.shape[1] * mb * nb)
+
+
+def ensure_layout(problem, layout: str | None, bucket: int = DEFAULT_BUCKET):
+    """Coerce a problem to the requested layout.
+
+    ``None`` (the default) infers the layout from the problem type —
+    passing a ``SparseProblem`` is enough to get the sparse path.
+    ``"sparse"`` converts a dense ``Problem`` via :func:`from_blocks` (a
+    SparseProblem passes through).  ``"dense"`` only validates — the store
+    does not carry (mb, nb), so use :func:`to_dense` explicitly to go back.
+    """
+
+    from repro.core.state import Problem  # local import: state is layout-agnostic
+
+    if layout is None:
+        return problem
+    if layout == "sparse":
+        if isinstance(problem, SparseProblem):
+            return problem
+        return from_blocks(problem.xb, problem.maskb, bucket)
+    if layout == "dense":
+        if isinstance(problem, SparseProblem):
+            raise ValueError(
+                "layout='dense' but got a SparseProblem; convert with "
+                "sparse.to_dense(sp, mb, nb) first"
+            )
+        return problem
+    raise ValueError(f"unknown layout {layout!r}; expected 'dense' or 'sparse'")
+
+
+# ---------------------------------------------------------------------------
+# Streaming minibatch sampling over observed entries
+# ---------------------------------------------------------------------------
+
+
+def sample_minibatch(key: jax.Array, sp: SparseProblem, batch: int) -> SparseProblem:
+    """Uniform with-replacement sample of ``batch`` observed entries per block.
+
+    Returns a SparseProblem with capacity ``batch`` (empty blocks sample
+    all-invalid slots).  The per-block stochastic gradient built from a
+    minibatch estimates the full-block gradient scaled by batch/nnz; use
+    :func:`minibatch_grad_scale` to correct when unbiasedness matters.
+    """
+
+    p, q, _ = sp.rows.shape
+
+    def one(k, rows, cols, vals, nnz):
+        idx = jax.random.randint(k, (batch,), 0, jnp.maximum(nnz, 1))
+        ok = (nnz > 0).astype(jnp.float32)
+        return (
+            jnp.take(rows, idx), jnp.take(cols, idx), jnp.take(vals, idx),
+            ok * jnp.ones((batch,), jnp.float32),
+        )
+
+    keys = jax.random.split(key, p * q)
+    rows, cols, vals, valid = jax.vmap(one)(
+        keys,
+        sp.rows.reshape(p * q, -1),
+        sp.cols.reshape(p * q, -1),
+        sp.vals.reshape(p * q, -1),
+        sp.nnz.reshape(p * q),
+    )
+    shape = (p, q, batch)
+    return SparseProblem(
+        rows.reshape(shape), cols.reshape(shape), vals.reshape(shape),
+        valid.reshape(shape), jnp.where(sp.nnz > 0, batch, 0).astype(jnp.int32),
+    )
+
+
+def minibatch_grad_scale(sp: SparseProblem, batch: int) -> jax.Array:
+    """(p, q) factor making minibatch f-gradients unbiased: nnz/batch."""
+
+    return sp.nnz.astype(jnp.float32) / float(batch)
+
+
+class MinibatchStream:
+    """Stateless (step -> minibatch) sampler, mirroring LMTokenPipeline's
+    restart-exact contract: ``batch_at(step)`` is a pure function of
+    (seed, step), so checkpoint resume replays the identical entry stream."""
+
+    def __init__(self, sp: SparseProblem, batch: int, seed: int = 0):
+        self.sp = sp
+        self.batch = batch
+        self.seed = seed
+        self._base = jax.random.PRNGKey(seed)
+
+    def batch_at(self, step: int) -> SparseProblem:
+        return sample_minibatch(
+            jax.random.fold_in(self._base, step), self.sp, self.batch
+        )

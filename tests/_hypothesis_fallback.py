@@ -1,0 +1,85 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+Provides ``given`` / ``settings`` / ``st`` with exactly the API surface this
+test-suite uses (integers, floats, booleans, sampled_from, tuples).  Property
+tests then run a fixed number of seeded pseudo-random examples instead of
+hypothesis' adaptive search — weaker shrinking/coverage, but the properties
+are still exercised and the suite collects without the optional dependency.
+
+Install the real thing with ``pip install -r requirements-dev.txt``.
+"""
+
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def _tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+st = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    booleans=_booleans,
+    sampled_from=_sampled_from,
+    tuples=_tuples,
+)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the (already ``given``-wrapped) function."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Run the test body over seeded examples drawn from the strategies."""
+
+    def deco(fn):
+        # NB: deliberately no functools.wraps — the wrapper must present a
+        # zero-arg signature or pytest mistakes strategy params for fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng((0xC0FFEE, i))
+                fn(*(s.draw(rng) for s in strategies))
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

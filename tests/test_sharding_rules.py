@@ -78,7 +78,6 @@ def test_moe_expert_parallel_specs():
     # granite-moe: 40 experts pad to 48, divisible -> EP as well
     cfg, shapes, specs = _specs_for("granite-moe-3b-a800m", ctx)
     wi = _leaf(specs, "units", "s0", "moe", "wi_gate")
-    assert wi.index(0) is None or True
     assert _leaf(shapes, "units", "s0", "moe", "wi_gate").shape[1] == 48
     assert wi == P(None, "model", "data", None)
 

@@ -1,0 +1,232 @@
+"""Sparse block engine: store round-trips, sparse-vs-dense equivalence of
+objective/gradients (1e-5), SDDMM kernel vs oracle, minibatch sampler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import GossipMCConfig
+from repro.core import grid as G
+from repro.core import objective as obj
+from repro.core import sequential, waves
+from repro.core.state import build_tables, init_state, make_problem
+from repro.data import lowrank_problem
+from repro.kernels.sddmm import sddmm_factor_grad, sddmm_factor_grad_ref
+from repro import sparse
+
+
+def _problem(m=96, n=80, p=3, q=2, r=4, density=0.2, seed=0):
+    spec = G.GridSpec(m, n, p, q, r)
+    ds = lowrank_problem(m, n, r, density=density, seed=seed)
+    prob = make_problem(ds.x, ds.train_mask, spec)
+    sp = sparse.from_blocks(prob.xb, prob.maskb, bucket=64)
+    cfg = GossipMCConfig(m=m, n=n, p=p, q=q, rank=r)
+    return spec, cfg, prob, sp
+
+
+# ---------------------------------------------------------------------------
+# Store round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.3, 1.0])
+def test_store_roundtrip(density):
+    rng = np.random.default_rng(3)
+    p, q, mb, nb = 2, 3, 10, 14
+    mask = (rng.random((p, q, mb, nb)) < density).astype(np.float32)
+    x = rng.normal(size=(p, q, mb, nb)).astype(np.float32) * mask
+    sp = sparse.from_blocks(x, mask, bucket=32)
+    assert sp.capacity % 32 == 0
+    xb2, mb2 = sparse.to_dense(sp, mb, nb)
+    np.testing.assert_array_equal(xb2, x)
+    np.testing.assert_array_equal(mb2, mask)
+    assert int(jnp.sum(sp.nnz)) == int(mask.sum())
+
+
+def test_pad_blockify_unblockify_roundtrip():
+    rng = np.random.default_rng(0)
+    m, n, p, q = 37, 53, 4, 3                     # not divisible by the grid
+    x = rng.normal(size=(m, n)).astype(np.float32)
+    mask = (rng.random((m, n)) < 0.4).astype(np.float32)
+    xp, mp_, mpad, npad = G.pad_to_grid(x, mask, p, q)
+    assert mpad % p == 0 and npad % q == 0
+    np.testing.assert_array_equal(xp[:m, :n], x)
+    assert float(mp_[m:].sum()) == 0.0 and float(mp_[:, n:].sum()) == 0.0
+    spec = G.GridSpec(mpad, npad, p, q, 2)
+    xb, mb = G.blockify(xp, mp_, spec)
+    np.testing.assert_array_equal(G.unblockify(xb, spec), xp)
+    np.testing.assert_array_equal(G.unblockify(mb, spec), mp_)
+
+
+def test_from_dataset_matches_dense_problem():
+    ds = lowrank_problem(50, 38, 3, density=0.25, seed=1)
+    sp, spec = sparse.from_dataset(ds, p=3, q=2, r=3)
+    xp, mp_, _, _ = G.pad_to_grid(ds.x, ds.train_mask, 3, 2)
+    xb, mb = G.blockify(xp * mp_, mp_, spec)
+    xb2, mb2 = sparse.to_dense(sp, spec.mb, spec.nb)
+    np.testing.assert_array_equal(xb2, xb)
+    np.testing.assert_array_equal(mb2, mb)
+
+
+# ---------------------------------------------------------------------------
+# Sparse == dense objective / gradients
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pq,density,seed", [
+    ((2, 2), 0.05, 0), ((3, 2), 0.2, 1), ((2, 4), 0.5, 2), ((4, 4), 0.1, 3),
+])
+def test_objective_matches_dense(pq, density, seed):
+    p, q = pq
+    spec, cfg, prob, sp = _problem(m=16 * p, n=12 * q, p=p, q=q,
+                                   density=density, seed=seed)
+    st = init_state(jax.random.PRNGKey(seed), spec)
+    c_d = float(obj.total_cost(prob, st.U, st.W, cfg.lam))
+    c_s = float(obj.total_cost(sp, st.U, st.W, cfg.lam))
+    np.testing.assert_allclose(c_s, c_d, rtol=1e-5)
+
+
+@pytest.mark.parametrize("pq,density,seed", [
+    ((2, 2), 0.05, 0), ((3, 2), 0.2, 1), ((2, 4), 0.5, 2), ((4, 4), 0.1, 3),
+])
+def test_full_gradients_match_dense(pq, density, seed):
+    p, q = pq
+    spec, cfg, prob, sp = _problem(m=16 * p, n=12 * q, p=p, q=q,
+                                   density=density, seed=seed)
+    st = init_state(jax.random.PRNGKey(seed + 10), spec)
+    gU_d, gW_d = waves.full_gradients(prob, st.U, st.W, rho=cfg.rho, lam=cfg.lam)
+    gU_s, gW_s = waves.full_gradients(sp, st.U, st.W, rho=cfg.rho, lam=cfg.lam)
+    scale = float(jnp.max(jnp.abs(gU_d))) + 1e-12
+    np.testing.assert_allclose(np.asarray(gU_s), np.asarray(gU_d),
+                               rtol=1e-5, atol=1e-5 * scale)
+    scale = float(jnp.max(jnp.abs(gW_d))) + 1e-12
+    np.testing.assert_allclose(np.asarray(gW_s), np.asarray(gW_d),
+                               rtol=1e-5, atol=1e-5 * scale)
+
+
+def test_sequential_step_matches_dense():
+    """Same PRNG key -> same sampled structure -> identical update."""
+
+    spec, cfg, prob, sp = _problem()
+    st = init_state(jax.random.PRNGKey(2), spec)
+    tables = build_tables(spec.p, spec.q, G.enumerate_structures(spec.p, spec.q))
+    k = jax.random.PRNGKey(7)
+    kw = dict(rho=cfg.rho, lam=cfg.lam, a=cfg.a, b=cfg.b)
+    st_d = sequential.sgd_structure_step(prob, st, tables, k, **kw)
+    st_s = sequential.sgd_structure_step(sp, st, tables, k, **kw)
+    np.testing.assert_allclose(np.asarray(st_s.U), np.asarray(st_d.U),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_s.W), np.asarray(st_d.W),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_wave_fit_sparse_layout_matches_dense():
+    spec, cfg, prob, sp = _problem()
+    key = jax.random.PRNGKey(0)
+    st_d, hist_d = waves.fit(prob, spec, cfg, key, num_rounds=3)
+    st_s, hist_s = waves.fit(prob, spec, cfg, key, num_rounds=3, layout="sparse")
+    np.testing.assert_allclose(np.asarray(st_s.U), np.asarray(st_d.U),
+                               rtol=1e-5, atol=1e-5)
+    assert hist_s[-1][0] == hist_d[-1][0]
+    np.testing.assert_allclose(hist_s[-1][1], hist_d[-1][1], rtol=1e-5)
+
+
+def test_ensure_layout():
+    spec, cfg, prob, sp = _problem()
+    assert sparse.ensure_layout(sp, None) is sp         # inferred from type
+    assert sparse.ensure_layout(prob, None) is prob
+    assert sparse.ensure_layout(sp, "sparse") is sp
+    assert sparse.ensure_layout(prob, "dense") is prob
+    conv = sparse.ensure_layout(prob, "sparse")
+    assert isinstance(conv, sparse.SparseProblem)
+    with pytest.raises(ValueError):
+        sparse.ensure_layout(sp, "dense")
+    with pytest.raises(ValueError):
+        sparse.ensure_layout(prob, "csr")
+
+
+# ---------------------------------------------------------------------------
+# SDDMM kernel vs oracle (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,N,r,density", [
+    (8, 8, 1, 0.5), (60, 90, 5, 0.1), (128, 128, 16, 0.05),
+    (33, 257, 3, 0.3), (256, 100, 8, 0.02),
+])
+def test_sddmm_kernel_matches_ref(M, N, r, density):
+    rng = np.random.default_rng(M + N + r)
+    mask = rng.random((M, N)) < density
+    rr, cc = np.nonzero(mask)
+    E = max(128, (len(rr) + 127) // 128 * 128)
+    rows = np.zeros(E, np.int32)
+    cols = np.zeros(E, np.int32)
+    vals = np.zeros(E, np.float32)
+    valid = np.zeros(E, np.float32)
+    rows[: len(rr)], cols[: len(rr)] = rr, cc
+    vals[: len(rr)] = rng.normal(size=len(rr)).astype(np.float32)
+    valid[: len(rr)] = 1.0
+    u = rng.normal(size=(M, r)).astype(np.float32)
+    w = rng.normal(size=(N, r)).astype(np.float32)
+
+    l1, gu1, gw1 = sddmm_factor_grad_ref(rows, cols, vals, valid, u, w)
+    l2, gu2, gw2 = sddmm_factor_grad(rows, cols, vals, valid, u, w)
+    np.testing.assert_allclose(float(l2), float(l1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gu2), np.asarray(gu1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw2), np.asarray(gw1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sddmm_all_padding_is_zero():
+    E, M, N, r = 128, 16, 16, 4
+    z = np.zeros(E, np.float32)
+    u = np.ones((M, r), np.float32)
+    w = np.ones((N, r), np.float32)
+    loss, gu, gw = sddmm_factor_grad(
+        z.astype(np.int32), z.astype(np.int32), z, z, u, w
+    )
+    assert float(loss) == 0.0
+    assert float(np.abs(gu).max()) == 0.0
+    assert float(np.abs(gw).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Minibatch sampler
+# ---------------------------------------------------------------------------
+
+
+def test_minibatch_samples_only_observed_entries():
+    spec, cfg, prob, sp = _problem(density=0.15)
+    mb = sparse.sample_minibatch(jax.random.PRNGKey(5), sp, 32)
+    assert mb.rows.shape == (spec.p, spec.q, 32)
+    xb, maskb = np.asarray(prob.xb), np.asarray(prob.maskb)
+    rows, cols = np.asarray(mb.rows), np.asarray(mb.cols)
+    vals, valid = np.asarray(mb.vals), np.asarray(mb.valid)
+    for i in range(spec.p):
+        for j in range(spec.q):
+            for k in range(32):
+                if valid[i, j, k]:
+                    assert maskb[i, j, rows[i, j, k], cols[i, j, k]] == 1.0
+                    assert vals[i, j, k] == xb[i, j, rows[i, j, k], cols[i, j, k]]
+
+
+def test_minibatch_stream_is_restart_exact():
+    spec, cfg, prob, sp = _problem()
+    s1 = sparse.MinibatchStream(sp, batch=16, seed=3)
+    s2 = sparse.MinibatchStream(sp, batch=16, seed=3)
+    a = s1.batch_at(7)
+    b = s2.batch_at(7)
+    np.testing.assert_array_equal(np.asarray(a.rows), np.asarray(b.rows))
+    np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
+    c = s1.batch_at(8)
+    assert not np.array_equal(np.asarray(a.rows), np.asarray(c.rows))
+
+
+def test_minibatch_grad_scale():
+    spec, cfg, prob, sp = _problem()
+    scale = sparse.minibatch_grad_scale(sp, 16)
+    np.testing.assert_allclose(
+        np.asarray(scale), np.asarray(sp.nnz, np.float32) / 16.0
+    )

@@ -6,12 +6,13 @@ users/s, item-scores/s and per-batch latency.
 
     PYTHONPATH=src python benchmarks/serve_recommend.py \
         [--users 6040] [--items 3706] [--rank 16] [--batch 256] [--k 10] \
-        [--iters 50] [--density 0.02]
+        [--iters 50] [--density 0.02] [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -32,6 +33,8 @@ def main():
     ap.add_argument("--iters", type=int, default=50)
     ap.add_argument("--density", type=float, default=0.02,
                     help="seen-item density for the exclusion table")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write results as JSON to this path")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -61,6 +64,21 @@ def main():
     print(f"batch={args.batch} k={args.k}: {per_batch_ms:.2f} ms/batch, "
           f"{total_users / dt:,.0f} users/s, "
           f"{total_users * args.items / dt / 1e6:,.0f}M scores/s")
+
+    if args.json:
+        out = {
+            "bench": "serve_recommend",
+            "backend": jax.default_backend(),
+            "config": {"users": args.users, "items": args.items,
+                       "rank": args.rank, "batch": args.batch, "k": args.k,
+                       "iters": args.iters, "density": args.density},
+            "per_batch_ms": per_batch_ms,
+            "users_per_s": total_users / dt,
+            "scores_per_s": total_users * args.items / dt,
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,22 +1,25 @@
 """Sparse vs dense objective bench: nnz-proportional speedup at low density.
 
-Times the Table-2 objective and the full ∇L evaluation in both layouts on
-the same problem, sweeping density.  The dense path reads O(m·n)
-values+masks per evaluation regardless of sparsity; the sparse path reads
-O(nnz).  On CPU the objective (pure gather + dot) wins by ~1/density; the
-gradient additionally pays XLA's scatter-add, so its crossover sits near
-2–3% density — on TPU the fused Pallas SDDMM kernel (one-hot MXU
-scatter) moves that crossover, see DESIGN.md §3.  Sparse timings scale
-linearly with nnz in both tables: that is the claim being demonstrated.
+Times the Table-2 objective and the full ∇L evaluation on the same problem,
+sweeping density, in three layouts: dense masked tensors, the segment-sorted
+sparse store (streaming CSR/CSC reductions, the default), and the unsorted
+scatter-add reference.  The dense path reads O(m·n) values+masks per
+evaluation regardless of sparsity; the sparse paths read O(nnz).  On CPU
+the objective (pure gather + dot) wins by ~1/density; the *sorted* gradient
+replaces XLA's serialized scatter-add with contiguous segment reductions,
+which moves the gradient crossover from ~2–3% density past 5% (DESIGN.md §3
+has the measured table).  Sparse timings scale linearly with nnz: that is
+the claim being demonstrated.
 
     PYTHONPATH=src python benchmarks/sparse_vs_dense.py \
         [--m 2048] [--n 2048] [--grid 4 4] [--rank 8] \
-        [--densities 0.01 0.02 0.05]
+        [--densities 0.01 0.02 0.05] [--iters 10] [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -27,6 +30,7 @@ from repro.core import grid as G, objective as obj, waves
 from repro.core.state import init_state, make_problem
 from repro.data import lowrank_problem
 from repro import sparse
+from repro.sparse import objective as sparse_obj
 
 
 def _time(fn, *args, iters=10):
@@ -38,6 +42,10 @@ def _time(fn, *args, iters=10):
     return (time.perf_counter() - t0) / iters * 1e3        # ms
 
 
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(a, b))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--m", type=int, default=2048)
@@ -47,6 +55,8 @@ def main():
     ap.add_argument("--densities", type=float, nargs="+",
                     default=[0.01, 0.02, 0.05])
     ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--json", type=str, default=None,
+                    help="write results as JSON to this path")
     args = ap.parse_args()
 
     p, q = args.grid
@@ -56,6 +66,8 @@ def main():
 
     grad_fn = jax.jit(lambda pr, U, W: waves.full_gradients(
         pr, U, W, rho=cfg.rho, lam=cfg.lam))
+    grad_scatter_fn = jax.jit(lambda sp_, U, W: sparse_obj.full_gradients_sparse(
+        sp_, U, W, rho=cfg.rho, lam=cfg.lam, method="scatter"))
     cost_fn = jax.jit(lambda pr, U, W: obj.total_cost(pr, U, W, cfg.lam))
 
     print(f"matrix {cfg.m}x{cfg.n} grid {p}x{q} rank {cfg.rank} "
@@ -70,23 +82,52 @@ def main():
         tc_d = _time(cost_fn, prob, st.U, st.W, iters=args.iters)
         tc_s = _time(cost_fn, sp, st.U, st.W, iters=args.iters)
         tg_d = _time(grad_fn, prob, st.U, st.W, iters=args.iters)
-        tg_s = _time(grad_fn, sp, st.U, st.W, iters=args.iters)
+        tg_s = _time(grad_fn, sp, st.U, st.W, iters=args.iters)       # sorted
+        tg_u = _time(grad_scatter_fn, sp, st.U, st.W, iters=args.iters)
         gd = grad_fn(prob, st.U, st.W)
         gs = grad_fn(sp, st.U, st.W)
-        diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(gd, gs))
-        rows.append((d, nnz, tc_d, tc_s, tg_d, tg_s, diff))
+        gu = grad_scatter_fn(sp, st.U, st.W)
+        rows.append({
+            "density": d,
+            "nnz": nnz,
+            "cost_dense_ms": tc_d,
+            "cost_sparse_ms": tc_s,
+            "grad_dense_ms": tg_d,
+            "grad_sorted_ms": tg_s,
+            "grad_scatter_ms": tg_u,
+            "grad_sorted_speedup": tg_d / tg_s,
+            "grad_scatter_speedup": tg_d / tg_u,
+            "maxdiff_sorted_vs_dense": _maxdiff(gs, gd),
+            "maxdiff_scatter_vs_dense": _maxdiff(gu, gd),
+        })
 
-    print(f"\nobjective (Table-2 cost):")
+    print("\nobjective (Table-2 cost):")
     print(f"{'density':>8} {'nnz':>10} {'dense_ms':>9} {'sparse_ms':>10} {'speedup':>8}")
-    for d, nnz, tc_d, tc_s, *_ in rows:
-        print(f"{d:8.3f} {nnz:10d} {tc_d:9.2f} {tc_s:10.2f} {tc_d / tc_s:7.1f}x")
+    for r in rows:
+        print(f"{r['density']:8.3f} {r['nnz']:10d} {r['cost_dense_ms']:9.2f} "
+              f"{r['cost_sparse_ms']:10.2f} "
+              f"{r['cost_dense_ms'] / r['cost_sparse_ms']:7.1f}x")
 
-    print(f"\nfull gradient (∇L):")
-    print(f"{'density':>8} {'nnz':>10} {'dense_ms':>9} {'sparse_ms':>10} "
-          f"{'speedup':>8} {'maxdiff':>10}")
-    for d, nnz, _, _, tg_d, tg_s, diff in rows:
-        print(f"{d:8.3f} {nnz:10d} {tg_d:9.2f} {tg_s:10.2f} "
-              f"{tg_d / tg_s:7.1f}x {diff:10.2e}")
+    print("\nfull gradient (∇L): sorted segment-reduce vs unsorted scatter vs dense")
+    print(f"{'density':>8} {'nnz':>10} {'dense_ms':>9} {'sorted_ms':>10} "
+          f"{'scatter_ms':>11} {'sorted_x':>9} {'scatter_x':>10} {'maxdiff':>10}")
+    for r in rows:
+        print(f"{r['density']:8.3f} {r['nnz']:10d} {r['grad_dense_ms']:9.2f} "
+              f"{r['grad_sorted_ms']:10.2f} {r['grad_scatter_ms']:11.2f} "
+              f"{r['grad_sorted_speedup']:8.1f}x {r['grad_scatter_speedup']:9.1f}x "
+              f"{r['maxdiff_sorted_vs_dense']:10.2e}")
+
+    if args.json:
+        out = {
+            "bench": "sparse_vs_dense",
+            "backend": jax.default_backend(),
+            "config": {"m": cfg.m, "n": cfg.n, "p": p, "q": q,
+                       "rank": cfg.rank, "iters": args.iters},
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"\nwrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -203,8 +203,9 @@ def make_gossip_step(
     pspec2 = P(row_axes, col_axes)
     rep = P()
     if layout == "sparse":
-        # entry tensors are (p, q, E) / (p, q): leading dims shard as usual
-        problem_spec = SparseProblem(pspec2, pspec2, pspec2, pspec2, pspec2)
+        # entry tensors ((p, q, E) / (p, q)) and the sorted-layout offsets
+        # ((p, q, mb+1) / (p, q, nb+1) / (p, q, E)) all shard on (p, q)
+        problem_spec = SparseProblem(*([pspec2] * len(SparseProblem._fields)))
     else:
         problem_spec = Problem(pspec2, pspec2)
     state_spec = State(pspec2, pspec2, rep)
@@ -262,7 +263,7 @@ def distributed_cost(mesh, problem: Problem | SparseProblem, state: State,
         axes += tuple(a) if isinstance(a, (tuple, list)) else (a,)
 
     if isinstance(problem, SparseProblem):
-        problem_spec = SparseProblem(pspec2, pspec2, pspec2, pspec2, pspec2)
+        problem_spec = SparseProblem(*([pspec2] * len(SparseProblem._fields)))
     else:
         problem_spec = Problem(pspec2, pspec2)
 

@@ -148,20 +148,24 @@ def _finish_structure_grads(gu_f, gw_f, u3, w3, cf3, cu_pair, cw_pair, rho, lam)
     return gu, gw
 
 
-@partial(jax.jit, static_argnames=("rho", "lam", "use_kernel"))
+@partial(jax.jit, static_argnames=("rho", "lam", "use_kernel", "method"))
 def structure_grads_sparse(
-    rows3, cols3, vals3, valid3, u3, w3, cf3, cu_pair, cw_pair,
-    rho: float, lam: float, use_kernel: bool = False,
+    rows3, cols3, vals3, valid3, cperm3, rptr3, cptr3, u3, w3,
+    cf3, cu_pair, cw_pair,
+    rho: float, lam: float, use_kernel: bool = False, method: str = "segment",
 ):
     """Sparse-layout twin of :func:`structure_grads`: the three blocks' f
-    gradients come from their padded-COO entry lists (O(nnz·r)); the
-    consensus/reg/normalization tail is byte-identical."""
+    gradients come from their segment-sorted entry lists (O(nnz·r) streaming
+    CSR/CSC reductions); the consensus/reg/normalization tail is
+    byte-identical."""
 
     f, gu_f, gw_f = jax.vmap(
-        lambda rows, cols, vals, valid, u, w: sparse_obj.f_grads_sparse(
-            rows, cols, vals, valid, u, w, use_kernel=use_kernel
+        lambda rows, cols, vals, valid, cperm, rptr, cptr, u, w:
+        sparse_obj.f_grads_sparse(
+            rows, cols, vals, valid, cperm, rptr, cptr, u, w,
+            use_kernel=use_kernel, method=method,
         )
-    )(rows3, cols3, vals3, valid3, u3, w3)
+    )(rows3, cols3, vals3, valid3, cperm3, rptr3, cptr3, u3, w3)
     del f
     return _finish_structure_grads(
         gu_f, gw_f, u3, w3, cf3, cu_pair, cw_pair, rho, lam

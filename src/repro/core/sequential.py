@@ -47,7 +47,9 @@ def sgd_structure_step(
     if isinstance(problem, SparseProblem):      # layout="sparse": O(nnz) f-part
         gu3, gw3 = obj.structure_grads_sparse(
             problem.rows[bi, bj], problem.cols[bi, bj],
-            problem.vals[bi, bj], problem.valid[bi, bj], u3, w3,
+            problem.vals[bi, bj], problem.valid[bi, bj],
+            problem.col_perm[bi, bj], problem.row_ptr[bi, bj],
+            problem.col_ptr[bi, bj], u3, w3,
             tables.cf[s], tables.cu[s], tables.cw[s],
             rho=rho, lam=lam, use_kernel=use_kernel,
         )

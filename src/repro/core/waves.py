@@ -54,15 +54,17 @@ def wave_step(
     w3 = state.W[bi, bj]
     if isinstance(problem, SparseProblem):            # layout="sparse"
         grad = jax.vmap(
-            lambda rows, cols, vals, valid, u, w, cf, cu, cw:
+            lambda rows, cols, vals, valid, cperm, rptr, cptr, u, w, cf, cu, cw:
             obj.structure_grads_sparse(
-                rows, cols, vals, valid, u, w, cf, cu, cw,
+                rows, cols, vals, valid, cperm, rptr, cptr, u, w, cf, cu, cw,
                 rho=rho, lam=lam, use_kernel=use_kernel,
             )
         )
         gu3, gw3 = grad(
             problem.rows[bi, bj], problem.cols[bi, bj],
             problem.vals[bi, bj], problem.valid[bi, bj],
+            problem.col_perm[bi, bj], problem.row_ptr[bi, bj],
+            problem.col_ptr[bi, bj],
             u3, w3, tables.cf, tables.cu, tables.cw,
         )
     else:

@@ -1,4 +1,17 @@
-from repro.kernels.sddmm.ops import sddmm_factor_grad
+from repro.kernels.sddmm.ops import sddmm_factor_grad, sddmm_segment_grad
 from repro.kernels.sddmm.ref import sddmm_factor_grad_ref, sddmm_residuals
+from repro.kernels.sddmm.segment import (
+    SEG_CHUNK,
+    sddmm_segment_grad_ref,
+    segment_reduce,
+)
 
-__all__ = ["sddmm_factor_grad", "sddmm_factor_grad_ref", "sddmm_residuals"]
+__all__ = [
+    "SEG_CHUNK",
+    "sddmm_factor_grad",
+    "sddmm_factor_grad_ref",
+    "sddmm_residuals",
+    "sddmm_segment_grad",
+    "sddmm_segment_grad_ref",
+    "segment_reduce",
+]

@@ -1,12 +1,16 @@
-"""Jitted public wrapper around the SDDMM Pallas kernel.
+"""Jitted public wrappers around the SDDMM Pallas kernels.
 
-Pads the entry list to a multiple of the entry tile (padding slots get
-valid=0 so they contribute nothing), pads r to the 128-lane boundary and
+Pad the entry list to a multiple of the entry tile (padding slots get
+valid=0 so they contribute nothing), pad r to the 128-lane boundary and
 M/N to sublane multiples (zero factor rows whose gradients are exactly zero
-and are sliced away), picks interpret mode automatically off-TPU, and falls
-back to the gather-based XLA reference whenever the one-hot working set
-(resident U/W/gU/gW + the (be×M)/(be×N) one-hot tiles) would blow the VMEM
-budget — there the reference's O(nnz·r) gather path wins anyway.
+and are sliced away), pick interpret mode automatically off-TPU, and fall
+back to the XLA path whenever the resident working set would blow the VMEM
+budget — there the O(nnz·r) XLA paths win anyway.
+
+Two entry points: :func:`sddmm_factor_grad` (order-agnostic one-hot
+scatter kernel, ``kernel.py``) and :func:`sddmm_segment_grad`
+(segment-sorted sequential-scan kernel, ``segment_kernel.py``, the default
+for the sorted store).
 """
 
 from __future__ import annotations
@@ -18,6 +22,8 @@ import jax.numpy as jnp
 
 from repro.kernels.sddmm.kernel import sddmm_factor_grad_pallas
 from repro.kernels.sddmm.ref import sddmm_factor_grad_ref
+from repro.kernels.sddmm.segment import sddmm_segment_grad_ref
+from repro.kernels.sddmm.segment_kernel import sddmm_segment_grad_pallas
 
 _LANE = 128
 _SUBLANE = 8
@@ -90,5 +96,97 @@ def sddmm_factor_grad(
 
     loss, gu, gw = sddmm_factor_grad_pallas(
         rp, cp, vp, mp, up, wp, be=be_eff, interpret=interpret
+    )
+    return loss, gu[:M, :r].astype(u.dtype), gw[:N, :r].astype(w.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("be", "interpret", "force_kernel")
+)
+def sddmm_segment_grad(
+    rows,
+    cols,
+    vals,
+    valid,
+    col_perm,
+    row_ptr,
+    col_ptr,
+    u,
+    w,
+    *,
+    be: int = 512,
+    interpret: bool | None = None,
+    force_kernel: bool = False,
+):
+    """(loss, gU, gW) from one block's *row-sorted* padded COO entries —
+    Pallas segment-reduce path (see ``segment_kernel.py``).
+
+    One call per gradient side: gU streams the CSR view directly, gW
+    streams the CSC dual view (entries gathered through ``col_perm``),
+    each with its segment offsets as boundary-difference selectors.
+    """
+
+    E = rows.shape[0]
+    M, r = u.shape
+    N = w.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    r_pad = _round_up(max(r, _LANE), _LANE)
+    m_pad = _round_up(M, _SUBLANE)
+    n_pad = _round_up(N, _SUBLANE)
+    be_eff = min(be, _round_up(E + 1, _LANE))
+    # every segment offset must sit strictly inside the padded stream so its
+    # boundary lane exists: pad at least one slot past E.
+    e_pad = _round_up(E + 1, be_eff)
+
+    vmem = (
+        2 * (m_pad + n_pad) * r_pad * 4          # U/W + g accumulators
+        + be_eff * (m_pad + n_pad + be_eff) * 4  # one-hots + scan triangle
+        + max(m_pad, n_pad) * be_eff * 4         # boundary-difference matrix
+    )
+    if vmem > _MAX_VMEM_BYTES and not force_kernel:
+        # resident layout does not fit — the XLA segment path is the
+        # nnz-proportional fallback and already beats scatter on CPU.
+        return sddmm_segment_grad_ref(
+            rows, cols, vals, valid, col_perm, row_ptr, col_ptr, u, w
+        )
+
+    def pad_e(a, fill):
+        pe = e_pad - E
+        if pe:
+            a = jnp.pad(a, (0, pe), constant_values=fill)
+        return a[None, :]                       # (1, E) lane-aligned layout
+
+    def pad_ptr(ptr, target):
+        # padded output rows see hi == lo == the closing offset, i.e. empty
+        # segments with exactly zero gradient
+        close = jnp.broadcast_to(ptr[-1], (target - ptr.shape[0] + 1,))
+        lo = jnp.concatenate([ptr[:-1], close])
+        hi = jnp.concatenate([ptr[1:], close])
+        return lo[None, :].astype(jnp.int32), hi[None, :].astype(jnp.int32)
+
+    up = _pad_rows(jnp.pad(u.astype(jnp.float32), ((0, 0), (0, r_pad - r))), m_pad)
+    wp = _pad_rows(jnp.pad(w.astype(jnp.float32), ((0, 0), (0, r_pad - r))), n_pad)
+
+    rp = pad_e(rows.astype(jnp.int32), 0)
+    cp = pad_e(cols.astype(jnp.int32), 0)
+    vp = pad_e(vals.astype(jnp.float32), 0.0)
+    mp = pad_e(valid.astype(jnp.float32), 0.0)
+    lo_r, hi_r = pad_ptr(row_ptr, m_pad)
+    loss, gu = sddmm_segment_grad_pallas(
+        rp, cp, vp, mp, lo_r, hi_r, up, wp,
+        side="u", be=be_eff, interpret=interpret,
+    )
+
+    perm = col_perm.astype(jnp.int32)
+    rc = pad_e(jnp.take(rows.astype(jnp.int32), perm, mode="clip"), 0)
+    cc = pad_e(jnp.take(cols.astype(jnp.int32), perm, mode="clip"), 0)
+    vc = pad_e(jnp.take(vals.astype(jnp.float32), perm, mode="clip"), 0.0)
+    mc = pad_e(jnp.take(valid.astype(jnp.float32), perm, mode="clip"), 0.0)
+    lo_c, hi_c = pad_ptr(col_ptr, n_pad)
+    _, gw = sddmm_segment_grad_pallas(
+        rc, cc, vc, mc, lo_c, hi_c, up, wp,
+        side="w", be=be_eff, interpret=interpret,
     )
     return loss, gu[:M, :r].astype(u.dtype), gw[:N, :r].astype(w.dtype)

@@ -2,10 +2,17 @@
 
 Same math as ``core/objective.py`` / ``core/waves.py`` restricted to
 observed entries: the f-term and its factor gradients are computed from the
-padded-COO store (O(nnz·r) instead of O(mb·nb·r) per block), while the
-consensus and regularization terms — which only touch the factors — are
-unchanged.  Gradients agree with the dense masked path to float rounding;
-tests pin the equivalence at 1e-5.
+segment-sorted padded-COO store (O(nnz·r) instead of O(mb·nb·r) per block),
+while the consensus and regularization terms — which only touch the factors
+— are unchanged.  Gradients agree with the dense masked path to float
+rounding; tests pin the equivalence at 1e-5.
+
+The default gradient ``method="segment"`` streams contiguous segment
+reductions over the store's CSR view (gU) and CSC dual view (gW) — see
+``kernels/sddmm/segment.py``; ``method="scatter"`` is the order-agnostic
+scatter-add reference kept for A/B validation and as the path for stores of
+unknown order.  ``use_kernel`` swaps in the Pallas implementation of the
+selected method.
 
 This module depends only on the sddmm kernel package so both
 ``core.objective`` and ``core.waves`` can import it without cycles.
@@ -20,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.kernels.sddmm import ops as sddmm_ops
 from repro.kernels.sddmm import ref as sddmm_ref
+from repro.kernels.sddmm import segment as sddmm_seg
 from repro.sparse.store import SparseProblem
 
 
@@ -30,15 +38,29 @@ def f_cost_sparse(rows, cols, vals, valid, u, w):
     return jnp.sum(e * e)
 
 
-def f_grads_sparse(rows, cols, vals, valid, u, w, use_kernel: bool = False):
+def f_grads_sparse(rows, cols, vals, valid, col_perm, row_ptr, col_ptr, u, w,
+                   use_kernel: bool = False, method: str = "segment"):
     """(f, gU, gW) for one block from its entry list; closed form.
 
-    ``use_kernel`` selects the fused Pallas SDDMM kernel; the default is the
-    gather-based XLA path (also the fallback for VMEM-oversized blocks)."""
+    ``method="segment"`` (default) requires the row-sorted layout the store
+    guarantees and reduces contiguous CSR/CSC segments; ``"scatter"`` is the
+    order-agnostic scatter-add reference.  ``use_kernel`` selects the Pallas
+    implementation of the chosen method (the XLA paths double as fallbacks
+    for VMEM-oversized blocks)."""
 
+    if method == "scatter":
+        if use_kernel:
+            return sddmm_ops.sddmm_factor_grad(rows, cols, vals, valid, u, w)
+        return sddmm_ref.sddmm_factor_grad_ref(rows, cols, vals, valid, u, w)
+    if method != "segment":
+        raise ValueError(f"unknown method {method!r}; 'segment' or 'scatter'")
     if use_kernel:
-        return sddmm_ops.sddmm_factor_grad(rows, cols, vals, valid, u, w)
-    return sddmm_ref.sddmm_factor_grad_ref(rows, cols, vals, valid, u, w)
+        return sddmm_ops.sddmm_segment_grad(
+            rows, cols, vals, valid, col_perm, row_ptr, col_ptr, u, w
+        )
+    return sddmm_seg.sddmm_segment_grad_ref(
+        rows, cols, vals, valid, col_perm, row_ptr, col_ptr, u, w
+    )
 
 
 def total_report_cost_sparse(sp: SparseProblem, U, W, lam: float):
@@ -71,18 +93,21 @@ def consensus_pulls(A: jax.Array, axis: int) -> jax.Array:
     return fwd + bwd
 
 
-@partial(jax.jit, static_argnames=("rho", "lam", "use_kernel"))
+@partial(jax.jit, static_argnames=("rho", "lam", "use_kernel", "method"))
 def full_gradients_sparse(
     sp: SparseProblem, U: jax.Array, W: jax.Array, *,
-    rho: float, lam: float, use_kernel: bool = False,
+    rho: float, lam: float, use_kernel: bool = False, method: str = "segment",
 ):
     """∇L of the collapsed objective, f-part from the sparse store."""
 
     _, gu_f, gw_f = jax.vmap(jax.vmap(
-        lambda rows, cols, vals, valid, u, w: f_grads_sparse(
-            rows, cols, vals, valid, u, w, use_kernel=use_kernel
+        lambda rows, cols, vals, valid, cperm, rptr, cptr, u, w:
+        f_grads_sparse(
+            rows, cols, vals, valid, cperm, rptr, cptr, u, w,
+            use_kernel=use_kernel, method=method,
         )
-    ))(sp.rows, sp.cols, sp.vals, sp.valid, U, W)
+    ))(sp.rows, sp.cols, sp.vals, sp.valid,
+       sp.col_perm, sp.row_ptr, sp.col_ptr, U, W)
     gU = gu_f + 2.0 * lam * U + 2.0 * rho * consensus_pulls(U, axis=1)
     gW = gw_f + 2.0 * lam * W + 2.0 * rho * consensus_pulls(W, axis=0)
     return gU, gW

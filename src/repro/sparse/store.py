@@ -1,23 +1,34 @@
-"""Padded-COO sparse block store for the gossip grid.
+"""Segment-sorted padded-COO sparse block store for the gossip grid.
 
 The dense path materializes (p, q, mb, nb) value/mask tensors, so every
 objective/gradient evaluation costs O(m·n) regardless of how sparse the
 ratings are.  MovieLens/Netflix-style workloads are ≤5% dense; this store
 keeps, per grid block, only the observed entries:
 
-    rows  : (p, q, E) int32   — intra-block row index of each entry
-    cols  : (p, q, E) int32   — intra-block col index
-    vals  : (p, q, E) float32 — observed value
-    valid : (p, q, E) float32 — 1 for real entries, 0 for padding
-    nnz   : (p, q)    int32   — real entry count per block
+    rows     : (p, q, E)    int32   — intra-block row index of each entry
+    cols     : (p, q, E)    int32   — intra-block col index
+    vals     : (p, q, E)    float32 — observed value
+    valid    : (p, q, E)    float32 — 1 for real entries, 0 for padding
+    nnz      : (p, q)       int32   — real entry count per block
+    col_perm : (p, q, E)    int32   — permutation to column-sorted order
+    row_ptr  : (p, q, mb+1) int32   — CSR segment offsets over the entry axis
+    col_ptr  : (p, q, nb+1) int32   — CSC segment offsets (in col_perm order)
+
+Entries are **segment-sorted** (DESIGN.md §3): real entries come first, in
+(row, col) lexicographic order, so each block row is a contiguous segment
+delimited by ``row_ptr`` and the factor gradients reduce over contiguous
+streams instead of random scatter-adds.  ``col_perm`` is the dual (CSC)
+view: gathering the entry axis through it yields column-sorted entries with
+``col_ptr`` segment offsets.  Padding slots carry rows=mb−1 (so the row
+stream stays non-decreasing end to end and gathers may legally advertise
+``indices_are_sorted``), cols=0, vals=0, valid=0 and contribute nothing to
+any sum.
 
 ``E`` is the per-block entry capacity: the maximum block nnz rounded up to a
 *bucket* multiple, so recompilation only triggers when occupancy crosses a
-bucket boundary, never per-matrix.  Real entries are stored first; padding
-slots carry rows=cols=0, vals=0, valid=0 and contribute nothing to any sum
-(DESIGN.md §3).  The leading (p, q) axes shard exactly like the dense
-tensors (P(row_axes, col_axes)), so the distributed gossip step reuses its
-halo protocol unchanged.
+bucket boundary, never per-matrix.  The leading (p, q) axes shard exactly
+like the dense tensors (P(row_axes, col_axes)), so the distributed gossip
+step reuses its halo protocol unchanged.
 """
 
 from __future__ import annotations
@@ -35,58 +46,103 @@ DEFAULT_BUCKET = 256
 
 
 class SparseProblem(NamedTuple):
-    """Blockified matrix-completion problem, observed entries only."""
+    """Blockified matrix-completion problem, observed entries only,
+    segment-sorted by row with a precomputed column-sorted dual view."""
 
-    rows: jax.Array    # (p, q, E) int32
-    cols: jax.Array    # (p, q, E) int32
-    vals: jax.Array    # (p, q, E) float32
-    valid: jax.Array   # (p, q, E) float32
-    nnz: jax.Array     # (p, q) int32
+    rows: jax.Array       # (p, q, E) int32
+    cols: jax.Array       # (p, q, E) int32
+    vals: jax.Array       # (p, q, E) float32
+    valid: jax.Array      # (p, q, E) float32
+    nnz: jax.Array        # (p, q) int32
+    col_perm: jax.Array   # (p, q, E) int32
+    row_ptr: jax.Array    # (p, q, mb+1) int32
+    col_ptr: jax.Array    # (p, q, nb+1) int32
 
     @property
     def capacity(self) -> int:
         return self.rows.shape[-1]
 
+    @property
+    def mb(self) -> int:
+        """Block row count (from the CSR offsets — the true shape source)."""
+
+        return self.row_ptr.shape[-1] - 1
+
+    @property
+    def nb(self) -> int:
+        """Block col count (from the CSC offsets)."""
+
+        return self.col_ptr.shape[-1] - 1
+
 
 def bucketed_capacity(max_nnz: int, bucket: int = DEFAULT_BUCKET) -> int:
     """Round the largest block nnz up to a bucket multiple (≥ one bucket)."""
 
+    if bucket <= 0:
+        raise ValueError(f"bucket must be positive, got {bucket}")
     return max(bucket, (max_nnz + bucket - 1) // bucket * bucket)
 
 
 def from_blocks(
     xb: np.ndarray, maskb: np.ndarray, bucket: int = DEFAULT_BUCKET
 ) -> SparseProblem:
-    """Convert blockified dense (p,q,mb,nb) tensors to the padded-COO store."""
+    """Convert blockified dense (p,q,mb,nb) tensors to the sorted store.
+
+    Fully vectorized: one ``np.nonzero`` over the block tensor plus bincount
+    packing — no per-entry (or per-block) Python loops, so MovieLens-scale
+    ingest stays in numpy kernels.  ``np.nonzero``'s C order already yields
+    (block, row, col) lexicographic entries, i.e. the row-sorted (CSR) view;
+    the column-sorted (CSC) dual view is one ``np.lexsort`` away.
+    """
 
     xb = np.asarray(xb)
     maskb = np.asarray(maskb)
-    p, q, _, _ = xb.shape
-    per: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
-    max_nnz = 0
-    for i in range(p):
-        for j in range(q):
-            r, c = np.nonzero(maskb[i, j])
-            per.append((r, c, xb[i, j][r, c]))
-            max_nnz = max(max_nnz, len(r))
-    E = bucketed_capacity(max_nnz, bucket)
-    rows = np.zeros((p, q, E), np.int32)
-    cols = np.zeros((p, q, E), np.int32)
-    vals = np.zeros((p, q, E), np.float32)
-    valid = np.zeros((p, q, E), np.float32)
-    nnz = np.zeros((p, q), np.int32)
-    for i in range(p):
-        for j in range(q):
-            r, c, v = per[i * q + j]
-            k = len(r)
-            rows[i, j, :k] = r
-            cols[i, j, :k] = c
-            vals[i, j, :k] = v
-            valid[i, j, :k] = 1.0
-            nnz[i, j] = k
+    p, q, mb, nb = xb.shape
+    bi, bj, rr, cc = np.nonzero(maskb)            # C order: row-sorted per block
+    blk = bi * q + bj                             # non-decreasing
+    total = len(blk)
+    nnz = np.bincount(blk, minlength=p * q).astype(np.int64)
+    E = bucketed_capacity(int(nnz.max()) if total else 0, bucket)
+    starts = np.zeros(p * q + 1, np.int64)
+    np.cumsum(nnz, out=starts[1:])
+    within = np.arange(total, dtype=np.int64) - starts[blk]
+    dest = blk * E + within
+
+    # padding rows sit at mb-1 so each block's row stream is non-decreasing
+    # over the full capacity — the segment engine's sorted-gather contract
+    rows = np.full(p * q * E, mb - 1, np.int32)
+    cols = np.zeros(p * q * E, np.int32)
+    vals = np.zeros(p * q * E, np.float32)
+    valid = np.zeros(p * q * E, np.float32)
+    rows[dest] = rr
+    cols[dest] = cc
+    vals[dest] = xb[bi, bj, rr, cc]
+    valid[dest] = 1.0
+
+    # CSR offsets: per-(block, row) counts, cumulated along the row axis.
+    rcnt = np.bincount(blk * mb + rr, minlength=p * q * mb).reshape(p * q, mb)
+    row_ptr = np.zeros((p * q, mb + 1), np.int32)
+    row_ptr[:, 1:] = np.cumsum(rcnt, axis=1)
+
+    # CSC dual view: stable (block, col, row) order.  lexsort keeps the
+    # block grouping (blk is already sorted and is the primary key), so the
+    # i-th col-sorted entry of block b sits at global position starts[b]+i.
+    order = np.lexsort((rr, cc, blk))
+    col_perm = np.tile(np.arange(E, dtype=np.int32), p * q)  # padding -> itself
+    col_perm[blk * E + within] = within[order].astype(np.int32)
+    ccnt = np.bincount(blk * nb + cc, minlength=p * q * nb).reshape(p * q, nb)
+    col_ptr = np.zeros((p * q, nb + 1), np.int32)
+    col_ptr[:, 1:] = np.cumsum(ccnt, axis=1)
+
     return SparseProblem(
-        jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
-        jnp.asarray(valid), jnp.asarray(nnz),
+        jnp.asarray(rows.reshape(p, q, E)),
+        jnp.asarray(cols.reshape(p, q, E)),
+        jnp.asarray(vals.reshape(p, q, E)),
+        jnp.asarray(valid.reshape(p, q, E)),
+        jnp.asarray(nnz.reshape(p, q).astype(np.int32)),
+        jnp.asarray(col_perm.reshape(p, q, E)),
+        jnp.asarray(row_ptr.reshape(p, q, mb + 1)),
+        jnp.asarray(col_ptr.reshape(p, q, nb + 1)),
     )
 
 
@@ -102,9 +158,13 @@ def from_dataset(
     return from_blocks(xb, maskb, bucket), spec
 
 
-def to_dense(sp: SparseProblem, mb: int, nb: int) -> tuple[np.ndarray, np.ndarray]:
-    """Back to dense (xb, maskb) block tensors — tests and interop."""
+def to_dense(sp: SparseProblem, mb: int | None = None,
+             nb: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Back to dense (xb, maskb) block tensors — tests and interop.  Block
+    dims default to the store's own CSR/CSC offsets."""
 
+    mb = sp.mb if mb is None else mb
+    nb = sp.nb if nb is None else nb
     rows = np.asarray(sp.rows)
     cols = np.asarray(sp.cols)
     vals = np.asarray(sp.vals)
@@ -120,8 +180,24 @@ def to_dense(sp: SparseProblem, mb: int, nb: int) -> tuple[np.ndarray, np.ndarra
     return xb, maskb
 
 
-def density(sp: SparseProblem, mb: int, nb: int) -> float:
-    return float(jnp.sum(sp.nnz)) / (sp.nnz.shape[0] * sp.nnz.shape[1] * mb * nb)
+def density(sp: SparseProblem, spec: G.GridSpec | int | None = None,
+            nb: int | None = None) -> float:
+    """Fraction of observed entries.
+
+    Block shape comes from a ``GridSpec`` (``density(sp, spec)``), from the
+    store's own CSR/CSC offsets (``density(sp)``), or from explicit
+    ``density(sp, mb, nb)`` ints for backwards compatibility.
+    """
+
+    if isinstance(spec, G.GridSpec):
+        mb_, nb_ = spec.mb, spec.nb
+    elif spec is None:
+        mb_, nb_ = sp.mb, sp.nb
+    else:
+        if nb is None:
+            raise TypeError("density(sp, mb, nb) needs both block dims")
+        mb_, nb_ = spec, nb
+    return float(jnp.sum(sp.nnz)) / (sp.nnz.shape[0] * sp.nnz.shape[1] * mb_ * nb_)
 
 
 def ensure_layout(problem, layout: str | None, bucket: int = DEFAULT_BUCKET):
@@ -130,8 +206,9 @@ def ensure_layout(problem, layout: str | None, bucket: int = DEFAULT_BUCKET):
     ``None`` (the default) infers the layout from the problem type —
     passing a ``SparseProblem`` is enough to get the sparse path.
     ``"sparse"`` converts a dense ``Problem`` via :func:`from_blocks` (a
-    SparseProblem passes through).  ``"dense"`` only validates — the store
-    does not carry (mb, nb), so use :func:`to_dense` explicitly to go back.
+    SparseProblem passes through).  ``"dense"`` only validates — going back
+    to dense tensors is an explicit :func:`to_dense` call, not a layout
+    coercion.
     """
 
     from repro.core.state import Problem  # local import: state is layout-agnostic
@@ -146,7 +223,7 @@ def ensure_layout(problem, layout: str | None, bucket: int = DEFAULT_BUCKET):
         if isinstance(problem, SparseProblem):
             raise ValueError(
                 "layout='dense' but got a SparseProblem; convert with "
-                "sparse.to_dense(sp, mb, nb) first"
+                "sparse.to_dense(sp) first"
             )
         return problem
     raise ValueError(f"unknown layout {layout!r}; expected 'dense' or 'sparse'")
@@ -160,24 +237,35 @@ def ensure_layout(problem, layout: str | None, bucket: int = DEFAULT_BUCKET):
 def sample_minibatch(key: jax.Array, sp: SparseProblem, batch: int) -> SparseProblem:
     """Uniform with-replacement sample of ``batch`` observed entries per block.
 
-    Returns a SparseProblem with capacity ``batch`` (empty blocks sample
-    all-invalid slots).  The per-block stochastic gradient built from a
-    minibatch estimates the full-block gradient scaled by batch/nnz; use
+    Returns a SparseProblem with capacity ``batch``.  Sampled *positions*
+    are sorted before gathering, so the batch inherits the store's
+    row-sorted order (rows non-decreasing) and carries fresh
+    ``row_ptr``/``col_ptr``/``col_perm`` offsets — stochastic gossip rounds
+    stay on the segment-reduce fast path.  Empty blocks sample all-invalid
+    slots.  The per-block stochastic gradient built from a minibatch
+    estimates the full-block gradient scaled by batch/nnz; use
     :func:`minibatch_grad_scale` to correct when unbiasedness matters.
     """
 
     p, q, _ = sp.rows.shape
+    mb, nb = sp.mb, sp.nb
 
     def one(k, rows, cols, vals, nnz):
         idx = jax.random.randint(k, (batch,), 0, jnp.maximum(nnz, 1))
+        idx = jnp.sort(idx)                     # sorted positions -> sorted rows
         ok = (nnz > 0).astype(jnp.float32)
-        return (
-            jnp.take(rows, idx), jnp.take(cols, idx), jnp.take(vals, idx),
-            ok * jnp.ones((batch,), jnp.float32),
-        )
+        r_ = jnp.take(rows, idx, indices_are_sorted=True, mode="clip")
+        c_ = jnp.take(cols, idx, indices_are_sorted=True, mode="clip")
+        v_ = jnp.take(vals, idx, indices_are_sorted=True, mode="clip")
+        rptr = jnp.searchsorted(r_, jnp.arange(mb + 1)).astype(jnp.int32)
+        perm = jnp.argsort(c_, stable=True).astype(jnp.int32)
+        cptr = jnp.searchsorted(
+            jnp.take(c_, perm, mode="clip"), jnp.arange(nb + 1)
+        ).astype(jnp.int32)
+        return r_, c_, v_, ok * jnp.ones((batch,), jnp.float32), perm, rptr, cptr
 
     keys = jax.random.split(key, p * q)
-    rows, cols, vals, valid = jax.vmap(one)(
+    rows, cols, vals, valid, perm, rptr, cptr = jax.vmap(one)(
         keys,
         sp.rows.reshape(p * q, -1),
         sp.cols.reshape(p * q, -1),
@@ -188,6 +276,7 @@ def sample_minibatch(key: jax.Array, sp: SparseProblem, batch: int) -> SparsePro
     return SparseProblem(
         rows.reshape(shape), cols.reshape(shape), vals.reshape(shape),
         valid.reshape(shape), jnp.where(sp.nnz > 0, batch, 0).astype(jnp.int32),
+        perm.reshape(shape), rptr.reshape(p, q, mb + 1), cptr.reshape(p, q, nb + 1),
     )
 
 

@@ -1,0 +1,103 @@
+"""Segment-sorted SDDMM gradient engine: XLA segment-reduce and the Pallas
+sequential-scan kernel vs the order-agnostic scatter oracle (interpret mode
+on CPU), plus the raw segment_reduce primitive."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparse
+from repro.kernels.sddmm import (
+    sddmm_factor_grad_ref,
+    sddmm_segment_grad,
+    sddmm_segment_grad_ref,
+    segment_reduce,
+)
+
+
+def _sorted_block(M, N, r, density, seed, bucket=64):
+    rng = np.random.default_rng(seed)
+    mask = (rng.random((1, 1, M, N)) < density).astype(np.float32)
+    x = rng.normal(size=(1, 1, M, N)).astype(np.float32) * mask
+    sp = sparse.from_blocks(x, mask, bucket=bucket)
+    u = rng.normal(size=(M, r)).astype(np.float32)
+    w = rng.normal(size=(N, r)).astype(np.float32)
+    args = (sp.rows[0, 0], sp.cols[0, 0], sp.vals[0, 0], sp.valid[0, 0],
+            sp.col_perm[0, 0], sp.row_ptr[0, 0], sp.col_ptr[0, 0], u, w)
+    return args, u, w
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+@pytest.mark.parametrize("E,S", [(37, 5), (64, 9), (128, 1), (6, 10)])
+def test_segment_reduce_matches_numpy(chunk, E, S):
+    rng = np.random.default_rng(E * S + chunk)
+    contrib = rng.normal(size=(E, 3)).astype(np.float32)
+    cuts = np.sort(rng.integers(0, E + 1, S - 1))
+    ptr = np.concatenate([[0], cuts, [E]]).astype(np.int32)
+    got = np.asarray(segment_reduce(jnp.asarray(contrib), jnp.asarray(ptr),
+                                    chunk=chunk))
+    want = np.stack([contrib[ptr[s]:ptr[s + 1]].sum(0) for s in range(S)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("M,N,r,density", [
+    (8, 8, 1, 0.5), (60, 90, 5, 0.1), (128, 128, 16, 0.05),
+    (33, 257, 3, 0.3), (256, 100, 8, 0.02), (40, 24, 4, 1.0),
+])
+def test_segment_ref_matches_scatter(M, N, r, density):
+    args, u, w = _sorted_block(M, N, r, density, seed=M + N + r)
+    l0, gu0, gw0 = sddmm_factor_grad_ref(*args[:4], u, w)
+    l1, gu1, gw1 = sddmm_segment_grad_ref(*args)
+    scale = float(jnp.max(jnp.abs(gu0))) + 1e-6
+    np.testing.assert_allclose(float(l1), float(l0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gu1), np.asarray(gu0),
+                               rtol=1e-4, atol=1e-4 * scale)
+    np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw0),
+                               rtol=1e-4, atol=1e-4 * scale)
+
+
+@pytest.mark.parametrize("M,N,r,density", [
+    (8, 8, 1, 0.5), (60, 90, 5, 0.1), (128, 128, 16, 0.05),
+    (33, 257, 3, 0.3), (256, 100, 8, 0.02),
+])
+def test_segment_kernel_matches_scatter(M, N, r, density):
+    args, u, w = _sorted_block(M, N, r, density, seed=2 * M + N + r)
+    l0, gu0, gw0 = sddmm_factor_grad_ref(*args[:4], u, w)
+    l2, gu2, gw2 = sddmm_segment_grad(*args)
+    scale = float(jnp.max(jnp.abs(gu0))) + 1e-6
+    np.testing.assert_allclose(float(l2), float(l0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gu2), np.asarray(gu0),
+                               rtol=1e-4, atol=1e-4 * scale)
+    np.testing.assert_allclose(np.asarray(gw2), np.asarray(gw0),
+                               rtol=1e-4, atol=1e-4 * scale)
+
+
+def test_segment_kernel_full_capacity_boundary():
+    """nnz == capacity: the closing offset equals E and must still land on a
+    boundary lane (ops pads the entry stream by at least one slot)."""
+
+    M = N = 16
+    r = 4
+    args, u, w = _sorted_block(M, N, r, density=1.0, seed=0, bucket=256)
+    assert int(args[5][-1]) == M * N == args[0].shape[0]  # row_ptr[-1] == E
+    l0, gu0, gw0 = sddmm_factor_grad_ref(*args[:4], u, w)
+    l2, gu2, gw2 = sddmm_segment_grad(*args)
+    np.testing.assert_allclose(float(l2), float(l0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gu2), np.asarray(gu0),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gw2), np.asarray(gw0),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_segment_kernel_all_padding_is_zero():
+    E, M, N, r = 128, 16, 16, 4
+    z = np.zeros(E, np.float32)
+    loss, gu, gw = sddmm_segment_grad(
+        z.astype(np.int32), z.astype(np.int32), z, z,
+        np.arange(E, dtype=np.int32),
+        np.zeros(M + 1, np.int32), np.zeros(N + 1, np.int32),
+        np.ones((M, r), np.float32), np.ones((N, r), np.float32),
+    )
+    assert float(loss) == 0.0
+    assert float(np.abs(gu).max()) == 0.0
+    assert float(np.abs(gw).max()) == 0.0

@@ -1,5 +1,6 @@
-"""Sparse block engine: store round-trips, sparse-vs-dense equivalence of
-objective/gradients (1e-5), SDDMM kernel vs oracle, minibatch sampler."""
+"""Sparse block engine: store round-trips and sorted-layout invariants,
+sparse-vs-dense equivalence of objective/gradients (1e-5, segment and
+scatter methods), SDDMM kernel vs oracle, minibatch sampler."""
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +60,67 @@ def test_pad_blockify_unblockify_roundtrip():
     np.testing.assert_array_equal(G.unblockify(mb, spec), mp_)
 
 
+@pytest.mark.parametrize("density,seed", [(0.0, 0), (0.07, 1), (0.4, 2), (1.0, 3)])
+def test_from_blocks_sorted_layout_invariants(density, seed):
+    """The store is segment-sorted: rows non-decreasing (cols within a row
+    increasing), CSR/CSC offsets consistent with per-row/col counts, and
+    col_perm a valid column-sorted view of the real entries."""
+
+    rng = np.random.default_rng(seed)
+    p, q, mb, nb = 2, 3, 11, 7
+    mask = (rng.random((p, q, mb, nb)) < density).astype(np.float32)
+    x = rng.normal(size=(p, q, mb, nb)).astype(np.float32) * mask
+    sp = sparse.from_blocks(x, mask, bucket=32)
+    rows, cols = np.asarray(sp.rows), np.asarray(sp.cols)
+    nnz = np.asarray(sp.nnz)
+    rptr, cptr = np.asarray(sp.row_ptr), np.asarray(sp.col_ptr)
+    perm = np.asarray(sp.col_perm)
+    for i in range(p):
+        for j in range(q):
+            k = int(nnz[i, j])
+            r_, c_ = rows[i, j, :k], cols[i, j, :k]
+            # (row, col)-lexicographic order over the real entries, and the
+            # padding tail (rows = mb-1) keeps the full stream non-decreasing
+            # — the sorted-gather contract of the segment engine
+            assert np.all(np.diff(rows[i, j]) >= 0)
+            same_row = np.diff(r_) == 0
+            assert np.all(np.diff(c_)[same_row] > 0)
+            # CSR offsets == per-row counts; closing offset == nnz
+            np.testing.assert_array_equal(
+                np.diff(rptr[i, j]), np.bincount(r_, minlength=mb))
+            assert rptr[i, j, 0] == 0 and rptr[i, j, -1] == k
+            # CSC view: real entries hit exactly once, cols sorted
+            pm = perm[i, j, :k]
+            assert sorted(pm) == list(range(k))
+            assert np.all(np.diff(c_[pm]) >= 0)
+            np.testing.assert_array_equal(
+                np.diff(cptr[i, j]), np.bincount(c_, minlength=nb))
+            assert cptr[i, j, -1] == k
+            # padding references in the dual view never hit real entries
+            assert np.all(perm[i, j, k:] >= k)
+
+
+def test_bucketed_capacity_guard():
+    assert sparse.bucketed_capacity(100, 64) == 128
+    assert sparse.bucketed_capacity(0, 64) == 64
+    with pytest.raises(ValueError):
+        sparse.bucketed_capacity(100, 0)
+    with pytest.raises(ValueError):
+        sparse.bucketed_capacity(100, -8)
+
+
+def test_density_block_shape_sources():
+    spec, cfg, prob, sp = _problem(density=0.2)
+    d_spec = sparse.density(sp, spec)                  # GridSpec overload
+    d_self = sparse.density(sp)                        # store's own offsets
+    d_ints = sparse.density(sp, spec.mb, spec.nb)      # legacy ints
+    expected = float(np.asarray(prob.maskb).mean())
+    np.testing.assert_allclose(d_spec, expected, rtol=1e-6)
+    assert d_spec == d_self == d_ints
+    with pytest.raises(TypeError):
+        sparse.density(sp, spec.mb)                    # mb without nb
+
+
 def test_from_dataset_matches_dense_problem():
     ds = lowrank_problem(50, 38, 3, density=0.25, seed=1)
     sp, spec = sparse.from_dataset(ds, p=3, q=2, r=3)
@@ -103,6 +165,33 @@ def test_full_gradients_match_dense(pq, density, seed):
     scale = float(jnp.max(jnp.abs(gW_d))) + 1e-12
     np.testing.assert_allclose(np.asarray(gW_s), np.asarray(gW_d),
                                rtol=1e-5, atol=1e-5 * scale)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_segment_and_scatter_methods_agree_with_dense(use_kernel):
+    """Sorted (segment), unsorted (scatter) and dense ∇L agree at 1e-5; the
+    Pallas implementations of both methods agree too (interpret on CPU)."""
+
+    from repro.sparse import objective as sparse_obj
+
+    spec, cfg, prob, sp = _problem(m=48, n=36, p=3, q=2, density=0.15, seed=4)
+    st = init_state(jax.random.PRNGKey(21), spec)
+    gd = waves.full_gradients(prob, st.U, st.W, rho=cfg.rho, lam=cfg.lam)
+    for method in ("segment", "scatter"):
+        gs = sparse_obj.full_gradients_sparse(
+            sp, st.U, st.W, rho=cfg.rho, lam=cfg.lam,
+            use_kernel=use_kernel, method=method,
+        )
+        for a, b in zip(gs, gd):
+            scale = float(jnp.max(jnp.abs(b))) + 1e-12
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5 * scale)
+    with pytest.raises(ValueError):
+        sparse_obj.f_grads_sparse(
+            sp.rows[0, 0], sp.cols[0, 0], sp.vals[0, 0], sp.valid[0, 0],
+            sp.col_perm[0, 0], sp.row_ptr[0, 0], sp.col_ptr[0, 0],
+            st.U[0, 0], st.W[0, 0], method="csr",
+        )
 
 
 def test_sequential_step_matches_dense():
@@ -230,3 +319,80 @@ def test_minibatch_grad_scale():
     np.testing.assert_allclose(
         np.asarray(scale), np.asarray(sp.nnz, np.float32) / 16.0
     )
+
+
+def test_minibatch_stream_batch_at_identical_across_instances():
+    """batch_at(step) is a pure function of (seed, step): every field of the
+    sampled store — including the sorted-layout offsets — replays exactly."""
+
+    spec, cfg, prob, sp = _problem(density=0.3, seed=5)
+    s1 = sparse.MinibatchStream(sp, batch=24, seed=11)
+    s2 = sparse.MinibatchStream(sp, batch=24, seed=11)
+    for step in (0, 3, 1000):
+        a, b = s1.batch_at(step), s2.batch_at(step)
+        for fa, fb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    other = sparse.MinibatchStream(sp, batch=24, seed=12).batch_at(3)
+    assert not np.array_equal(np.asarray(other.rows),
+                              np.asarray(s1.batch_at(3).rows))
+
+
+def test_minibatch_sorted_batch_invariants():
+    """Minibatches stay on the segment-reduce fast path: rows non-decreasing,
+    CSR/CSC offsets consistent with the sampled entries, nnz == batch for
+    non-empty blocks."""
+
+    spec, cfg, prob, sp = _problem(density=0.15, seed=6)
+    batch = 40
+    mbat = sparse.sample_minibatch(jax.random.PRNGKey(9), sp, batch)
+    rows = np.asarray(mbat.rows)
+    cols = np.asarray(mbat.cols)
+    rptr = np.asarray(mbat.row_ptr)
+    cptr = np.asarray(mbat.col_ptr)
+    perm = np.asarray(mbat.col_perm)
+    nnz = np.asarray(mbat.nnz)
+    assert rptr.shape == (spec.p, spec.q, spec.mb + 1)
+    assert cptr.shape == (spec.p, spec.q, spec.nb + 1)
+    for i in range(spec.p):
+        for j in range(spec.q):
+            r_, c_ = rows[i, j], cols[i, j]
+            assert nnz[i, j] == batch          # no empty blocks at this density
+            assert np.all(np.diff(r_) >= 0)    # row-sorted draw
+            np.testing.assert_array_equal(
+                np.diff(rptr[i, j]), np.bincount(r_, minlength=spec.mb))
+            assert rptr[i, j, -1] == batch
+            pm = perm[i, j]
+            assert sorted(pm) == list(range(batch))
+            assert np.all(np.diff(c_[pm]) >= 0)
+            np.testing.assert_array_equal(
+                np.diff(cptr[i, j]), np.bincount(c_, minlength=spec.nb))
+
+
+def test_minibatch_empty_block_sampling():
+    """A block with no observations samples all-invalid slots, zero nnz, and
+    a zero f-gradient through the segment path."""
+
+    from repro.sparse import objective as sparse_obj
+
+    rng = np.random.default_rng(0)
+    p, q, mb, nb, r = 2, 2, 12, 10, 3
+    mask = (rng.random((p, q, mb, nb)) < 0.3).astype(np.float32)
+    mask[0, 1] = 0.0                               # empty block
+    x = rng.normal(size=(p, q, mb, nb)).astype(np.float32) * mask
+    sp = sparse.from_blocks(x, mask, bucket=32)
+    batch = 16
+    mbat = sparse.sample_minibatch(jax.random.PRNGKey(1), sp, batch)
+    assert int(mbat.nnz[0, 1]) == 0
+    assert float(jnp.sum(mbat.valid[0, 1])) == 0.0
+    U = jnp.asarray(rng.normal(size=(p, q, mb, r)), jnp.float32)
+    W = jnp.asarray(rng.normal(size=(p, q, nb, r)), jnp.float32)
+    gU, gW = sparse_obj.full_gradients_sparse(mbat, U, W, rho=0.0, lam=0.0)
+    assert float(jnp.max(jnp.abs(gU[0, 1]))) == 0.0
+    assert float(jnp.max(jnp.abs(gW[0, 1]))) == 0.0
+    # non-empty blocks: segment and scatter agree on the sampled batch
+    gU2, gW2 = sparse_obj.full_gradients_sparse(
+        mbat, U, W, rho=0.0, lam=0.0, method="scatter")
+    np.testing.assert_allclose(np.asarray(gU), np.asarray(gU2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gW), np.asarray(gW2),
+                               rtol=1e-5, atol=1e-5)

@@ -1,12 +1,17 @@
 """Top-k recommendation serving throughput bench.
 
-Builds a MovieLens-scale serving index (random factors — serving cost does
-not depend on factor values) and measures batched masked top-k throughput:
-users/s, item-scores/s and per-batch latency.
+Measures batched masked top-k throughput (users/s, item-scores/s, per-batch
+latency) on a MovieLens-scale serving index.  Two index sources:
+
+* default: random factors at the requested shape — serving cost does not
+  depend on factor values, so this isolates pure serving throughput;
+* ``--from-fit``: the full session-API path — train a MovieLens proxy with
+  ``Trainer.fit`` and bridge into serving via
+  ``FitResult.to_recommend_index()`` (shapes then come from the proxy).
 
     PYTHONPATH=src python benchmarks/serve_recommend.py \
         [--users 6040] [--items 3706] [--rank 16] [--batch 256] [--k 10] \
-        [--iters 50] [--density 0.02] [--json PATH]
+        [--iters 50] [--density 0.02] [--from-fit] [--rounds 30] [--json PATH]
 """
 
 from __future__ import annotations
@@ -23,6 +28,36 @@ from repro.serve.recommend import (RecommendIndex, build_seen_table,
                                    recommend_topk)
 
 
+def _random_index(args) -> RecommendIndex:
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(args.users, args.rank)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(args.items, args.rank)), jnp.float32)
+    mask = (rng.random((args.users, args.items)) < args.density)
+    seen = jnp.asarray(build_seen_table(mask.astype(np.float32), args.items))
+    return RecommendIndex(u, w, seen)
+
+
+def _fitted_index(args) -> RecommendIndex:
+    from repro.config import GossipMCConfig
+    from repro.data import movielens_proxy
+    from repro.mc import CompletionProblem, Trainer, Wave
+
+    nratings = int(args.users * args.items * args.density)
+    ds = movielens_proxy(num_users=args.users, num_items=args.items,
+                         num_ratings=nratings, seed=0)
+    p = q = 4
+    problem = CompletionProblem.from_dataset(ds, p, q, args.rank,
+                                             layout="sparse",
+                                             mean_center=True)
+    spec = problem.spec
+    cfg = GossipMCConfig(m=spec.m, n=spec.n, p=p, q=q, rank=args.rank,
+                         rho=1e3, lam=1e-6, a=2.0e-4, b=5.0e-7)
+    res = Trainer(cfg).fit(problem, Wave(num_rounds=args.rounds), seed=0)
+    print(f"trained {args.rounds} wave rounds: cost={res.final_cost:.3e} "
+          f"rmse={res.rmse():.4f} ({res.wall_time:.1f}s)")
+    return res.to_recommend_index()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--users", type=int, default=6040)
@@ -33,19 +68,21 @@ def main():
     ap.add_argument("--iters", type=int, default=50)
     ap.add_argument("--density", type=float, default=0.02,
                     help="seen-item density for the exclusion table")
+    ap.add_argument("--from-fit", action="store_true",
+                    help="build the index by training a MovieLens proxy "
+                         "through Trainer.fit + to_recommend_index()")
+    ap.add_argument("--rounds", type=int, default=30,
+                    help="wave rounds for --from-fit")
     ap.add_argument("--json", type=str, default=None,
                     help="write results as JSON to this path")
     args = ap.parse_args()
 
-    rng = np.random.default_rng(0)
-    u = jnp.asarray(rng.normal(size=(args.users, args.rank)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(args.items, args.rank)), jnp.float32)
-    mask = (rng.random((args.users, args.items)) < args.density)
-    seen = jnp.asarray(build_seen_table(mask.astype(np.float32), args.items))
-    index = RecommendIndex(u, w, seen)
+    index = _fitted_index(args) if args.from_fit else _random_index(args)
+    num_users, num_items = index.u.shape[0], index.w.shape[0]
 
+    rng = np.random.default_rng(1)
     user_batches = [
-        jnp.asarray(rng.integers(0, args.users, args.batch), jnp.int32)
+        jnp.asarray(rng.integers(0, num_users, args.batch), jnp.int32)
         for _ in range(args.iters)
     ]
     # warmup/compile
@@ -59,22 +96,24 @@ def main():
 
     total_users = args.batch * args.iters
     per_batch_ms = dt / args.iters * 1e3
-    print(f"index: {args.users} users x {args.items} items, rank {args.rank}, "
-          f"seen table width {seen.shape[1]} (backend={jax.default_backend()})")
+    print(f"index: {num_users} users x {num_items} items, rank {args.rank}, "
+          f"seen table width {index.seen.shape[1]} "
+          f"(backend={jax.default_backend()})")
     print(f"batch={args.batch} k={args.k}: {per_batch_ms:.2f} ms/batch, "
           f"{total_users / dt:,.0f} users/s, "
-          f"{total_users * args.items / dt / 1e6:,.0f}M scores/s")
+          f"{total_users * num_items / dt / 1e6:,.0f}M scores/s")
 
     if args.json:
         out = {
             "bench": "serve_recommend",
             "backend": jax.default_backend(),
-            "config": {"users": args.users, "items": args.items,
+            "config": {"users": num_users, "items": num_items,
                        "rank": args.rank, "batch": args.batch, "k": args.k,
-                       "iters": args.iters, "density": args.density},
+                       "iters": args.iters, "density": args.density,
+                       "from_fit": bool(args.from_fit)},
             "per_batch_ms": per_batch_ms,
             "users_per_s": total_users / dt,
-            "scores_per_s": total_users * args.items / dt,
+            "scores_per_s": total_users * num_items / dt,
         }
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)

@@ -1,19 +1,25 @@
 """Sparse vs dense objective bench: nnz-proportional speedup at low density.
 
-Times the Table-2 objective and the full ∇L evaluation on the same problem,
-sweeping density, in three layouts: dense masked tensors, the segment-sorted
-sparse store (streaming CSR/CSC reductions, the default), and the unsorted
-scatter-add reference.  The dense path reads O(m·n) values+masks per
-evaluation regardless of sparsity; the sparse paths read O(nnz).  On CPU
-the objective (pure gather + dot) wins by ~1/density; the *sorted* gradient
-replaces XLA's serialized scatter-add with contiguous segment reductions,
-which moves the gradient crossover from ~2–3% density past 5% (DESIGN.md §3
-has the measured table).  Sparse timings scale linearly with nnz: that is
-the claim being demonstrated.
+Times the Table-2 objective and the full ∇L evaluation on the same
+``CompletionProblem``, sweeping density, in three engine configurations:
+dense masked tensors, the segment-sorted sparse store (streaming CSR/CSC
+reductions, the default), and the unsorted scatter-add reference — all
+selected through ``EngineOptions`` (``problem.with_engine(...)`` /
+``with_layout(...)``), never through divergent entry points.  The dense
+path reads O(m·n) values+masks per evaluation regardless of sparsity; the
+sparse paths read O(nnz).  On CPU the objective (pure gather + dot) wins by
+~1/density; the *sorted* gradient replaces XLA's serialized scatter-add
+with contiguous segment reductions, which moves the gradient crossover from
+~2–3% density past 5% (DESIGN.md §3 has the measured table).
+
+``--chunks`` additionally sweeps the segment-reduce chunk size (the
+``EngineOptions.chunk`` knob, ROADMAP autotune follow-on) and the JSON
+output records the per-chunk timings + the fastest choice per density.
 
     PYTHONPATH=src python benchmarks/sparse_vs_dense.py \
         [--m 2048] [--n 2048] [--grid 4 4] [--rank 8] \
-        [--densities 0.01 0.02 0.05] [--iters 10] [--json PATH]
+        [--densities 0.01 0.02 0.05] [--iters 10] \
+        [--chunks 16 32 64] [--json PATH]
 """
 
 from __future__ import annotations
@@ -26,19 +32,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import GossipMCConfig
-from repro.core import grid as G, objective as obj, waves
-from repro.core.state import init_state, make_problem
+from repro.core.state import init_state
 from repro.data import lowrank_problem
-from repro import sparse
-from repro.sparse import objective as sparse_obj
+from repro.mc import CompletionProblem
 
 
-def _time(fn, *args, iters=10):
-    jax.tree.leaves(fn(*args))[0].block_until_ready()      # compile + warmup
+def _sync(out):
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def _time(fn, iters=10):
+    _sync(fn())                                            # compile + warmup
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = fn(*args)
-    jax.tree.leaves(out)[0].block_until_ready()
+        out = fn()
+    _sync(out)
     return (time.perf_counter() - t0) / iters * 1e3        # ms
 
 
@@ -55,38 +65,48 @@ def main():
     ap.add_argument("--densities", type=float, nargs="+",
                     default=[0.01, 0.02, 0.05])
     ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--chunks", type=int, nargs="+", default=[16, 32, 64],
+                    help="segment-reduce chunk sizes to sweep "
+                         "(EngineOptions.chunk)")
     ap.add_argument("--json", type=str, default=None,
                     help="write results as JSON to this path")
     args = ap.parse_args()
 
     p, q = args.grid
     cfg = GossipMCConfig(m=args.m, n=args.n, p=p, q=q, rank=args.rank)
-    spec = G.GridSpec(cfg.m, cfg.n, p, q, cfg.rank)
-    st = init_state(jax.random.PRNGKey(0), spec)
-
-    grad_fn = jax.jit(lambda pr, U, W: waves.full_gradients(
-        pr, U, W, rho=cfg.rho, lam=cfg.lam))
-    grad_scatter_fn = jax.jit(lambda sp_, U, W: sparse_obj.full_gradients_sparse(
-        sp_, U, W, rho=cfg.rho, lam=cfg.lam, method="scatter"))
-    cost_fn = jax.jit(lambda pr, U, W: obj.total_cost(pr, U, W, cfg.lam))
+    rho, lam = cfg.rho, cfg.lam
 
     print(f"matrix {cfg.m}x{cfg.n} grid {p}x{q} rank {cfg.rank} "
           f"({args.iters} iters, backend={jax.default_backend()})")
     rows = []
+    st = None
     for d in args.densities:
         ds = lowrank_problem(cfg.m, cfg.n, cfg.rank, density=d, seed=0)
-        prob = make_problem(ds.x, ds.train_mask, spec)
-        sp = sparse.from_blocks(prob.xb, prob.maskb)
-        nnz = int(jnp.sum(sp.nnz))
+        dense = CompletionProblem.from_dataset(ds, p, q, args.rank,
+                                               layout="dense")
+        sorted_ = dense.with_layout("sparse")              # segment method
+        scatter = sorted_.with_engine(method="scatter")
+        if st is None:
+            st = init_state(jax.random.PRNGKey(0), dense.spec)
+        nnz = int(jnp.sum(sorted_.data.nnz))
 
-        tc_d = _time(cost_fn, prob, st.U, st.W, iters=args.iters)
-        tc_s = _time(cost_fn, sp, st.U, st.W, iters=args.iters)
-        tg_d = _time(grad_fn, prob, st.U, st.W, iters=args.iters)
-        tg_s = _time(grad_fn, sp, st.U, st.W, iters=args.iters)       # sorted
-        tg_u = _time(grad_scatter_fn, sp, st.U, st.W, iters=args.iters)
-        gd = grad_fn(prob, st.U, st.W)
-        gs = grad_fn(sp, st.U, st.W)
-        gu = grad_scatter_fn(sp, st.U, st.W)
+        grad = lambda pr: (lambda: pr.full_gradients(st, rho=rho, lam=lam))
+        cost = lambda pr: (lambda: pr.total_cost_device(st, lam))
+        tc_d = _time(cost(dense), iters=args.iters)
+        tc_s = _time(cost(sorted_), iters=args.iters)
+        tg_d = _time(grad(dense), iters=args.iters)
+        tg_s = _time(grad(sorted_), iters=args.iters)
+        tg_u = _time(grad(scatter), iters=args.iters)
+        gd = dense.full_gradients(st, rho=rho, lam=lam)
+        gs = sorted_.full_gradients(st, rho=rho, lam=lam)
+        gu = scatter.full_gradients(st, rho=rho, lam=lam)
+
+        sweep = {
+            c: _time(grad(sorted_.with_engine(chunk=c)), iters=args.iters)
+            for c in args.chunks
+        }
+        best_chunk = min(sweep, key=sweep.get)
+
         rows.append({
             "density": d,
             "nnz": nnz,
@@ -99,6 +119,8 @@ def main():
             "grad_scatter_speedup": tg_d / tg_u,
             "maxdiff_sorted_vs_dense": _maxdiff(gs, gd),
             "maxdiff_scatter_vs_dense": _maxdiff(gu, gd),
+            "chunk_sweep_ms": {str(c): ms for c, ms in sweep.items()},
+            "chunk_best": best_chunk,
         })
 
     print("\nobjective (Table-2 cost):")
@@ -117,12 +139,21 @@ def main():
               f"{r['grad_sorted_speedup']:8.1f}x {r['grad_scatter_speedup']:9.1f}x "
               f"{r['maxdiff_sorted_vs_dense']:10.2e}")
 
+    print("\nsegment-reduce chunk sweep (sorted ∇L, ms):")
+    hdr = " ".join(f"c={c:<4d}" for c in args.chunks)
+    print(f"{'density':>8}  {hdr}  best")
+    for r in rows:
+        cells = " ".join(f"{r['chunk_sweep_ms'][str(c)]:6.2f}"
+                         for c in args.chunks)
+        print(f"{r['density']:8.3f}  {cells}  c={r['chunk_best']}")
+
     if args.json:
         out = {
             "bench": "sparse_vs_dense",
             "backend": jax.default_backend(),
             "config": {"m": cfg.m, "n": cfg.n, "p": p, "q": q,
-                       "rank": cfg.rank, "iters": args.iters},
+                       "rank": cfg.rank, "iters": args.iters,
+                       "chunks": args.chunks},
             "rows": rows,
         }
         with open(args.json, "w") as f:

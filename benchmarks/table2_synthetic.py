@@ -1,10 +1,12 @@
 """Paper Table 2: synthetic convergence of Exp#1–#6.
 
-Reproduces the cost-vs-iterations table (cost = Σ f_ij + λ‖U‖² + λ‖W‖²).
-The paper runs 240k–400k sequential Algorithm-1 iterations; we run the
-parallel scheduler (same objective, same γ_t decay per structure update)
-and report at the paper's iteration checkpoints.  Exp#5/#6 (5000²/10000²)
-run reduced horizons by default; ``--full`` matches the paper's.
+Reproduces the cost-vs-iterations table (cost = Σ f_ij + λ‖U‖² + λ‖W‖²)
+through the unified session API: one ``CompletionProblem`` per experiment,
+one ``Trainer`` warm-started across the paper's iteration checkpoints with
+the deterministic ``FullGD`` schedule (same objective, same γ_t decay per
+structure update as the sequential algorithm).  The paper runs 240k–400k
+sequential Algorithm-1 iterations; Exp#5/#6 (5000²/10000²) run reduced
+horizons by default; ``--full`` matches the paper's.
 """
 
 from __future__ import annotations
@@ -14,9 +16,9 @@ import time
 import jax
 
 from repro.configs.gossip_mc import EXPERIMENTS
-from repro.core import grid as G, objective as obj, waves
-from repro.core.state import init_state, make_problem
+from repro.core.state import init_state
 from repro.data import lowrank_problem
+from repro.mc import CompletionProblem, FullGD, Trainer
 
 CHECKPOINTS = (80_000, 160_000, 240_000, 280_000, 400_000)
 
@@ -26,21 +28,20 @@ def run_experiment(name: str, full: bool = False):
     checkpoints = CHECKPOINTS
     if not full and cfg.m >= 5000:
         checkpoints = (10_000, 20_000)
-    spec = G.GridSpec(cfg.m, cfg.n, cfg.p, cfg.q, cfg.rank)
     ds = lowrank_problem(cfg.m, cfg.n, cfg.rank, density=cfg.density, seed=1)
-    prob = make_problem(ds.x, ds.train_mask, spec)
-    n_struct = spec.num_structures
+    problem = CompletionProblem.from_dataset(ds, cfg.p, cfg.q, cfg.rank)
+    n_struct = problem.spec.num_structures
 
-    state = init_state(jax.random.PRNGKey(cfg.seed), spec)
-    cost = lambda st: float(obj.total_report_cost(
-        prob.xb, prob.maskb, st.U, st.W, cfg.lam))
-    rows = [(0, cost(state))]
+    trainer = Trainer(cfg)
+    state = init_state(jax.random.PRNGKey(cfg.seed), problem.spec)
+    rows = [(0, problem.total_cost(state, cfg.lam))]
     t0 = time.time()
     for target_t in checkpoints:
         rounds = max(1, (target_t - int(state.t)) // n_struct)
-        state = waves.full_gd_rounds(prob, state, rounds=rounds, rho=cfg.rho,
-                                     lam=cfg.lam, a=cfg.a, b=cfg.b)
-        rows.append((int(state.t), cost(state)))
+        res = trainer.fit(problem, FullGD(num_rounds=rounds,
+                                          eval_every=rounds), state=state)
+        state = res.state
+        rows.append((res.t, res.final_cost))
     return rows, time.time() - t0
 
 

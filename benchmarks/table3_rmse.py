@@ -1,46 +1,39 @@
 """Paper Table 3: test RMSE × decomposition grid × rank.
 
 Offline container ⇒ a seeded MovieLens-scale proxy (long-tail popularity,
-user/item biases, ratings in [1,5]; DESIGN.md §8).  Pass ``--data
+user/item biases, ratings in [1,5]; DESIGN.md §9).  Pass ``--data
 path.csv`` to run on a real ratings file.  Default is a reduced
 1800×1200/120k-ratings proxy; ``--full`` runs the ML-1M-scale proxy
 (6040×3706, 1M ratings).
+
+Each cell is one ``CompletionProblem`` (mean-centered, grid-padded) fitted
+with the deterministic ``FullGD`` schedule through ``Trainer`` — the
+facade's ``mean_center=True`` replaces the hand-rolled μ bookkeeping, and
+``FitResult.rmse()`` evaluates the held-out split in the centered frame.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
-import jax
-import numpy as np
-
 from repro.config import GossipMCConfig
-from repro.core import assemble, grid as G, waves
-from repro.core.state import make_problem
 from repro.data import movielens_proxy
 from repro.data.synthetic import load_movielens_csv
+from repro.mc import CompletionProblem, FullGD, Trainer
 
 GRIDS = ((2, 2), (3, 3), (4, 4), (5, 5))
 RANKS = (5, 10, 15)
 
 
 def run_cell(ds, p, q, rank, rounds=800):
-    x, mask, m0, n0 = ds.x, ds.train_mask, *ds.x.shape
-    x, mask, m, n = G.pad_to_grid(x, mask, p, q)
-    spec = G.GridSpec(m, n, p, q, rank)
-    prob = make_problem(x, mask, spec)
-    # mean-center observed ratings (standard MC practice)
-    mu = float(x.sum() / max(mask.sum(), 1))
-    prob = prob._replace(xb=prob.xb - mu * prob.maskb)
-    cfg = GossipMCConfig(m=m, n=n, p=p, q=q, rank=rank,
+    problem = CompletionProblem.from_dataset(ds, p, q, rank,
+                                             mean_center=True)
+    spec = problem.spec
+    cfg = GossipMCConfig(m=spec.m, n=spec.n, p=p, q=q, rank=rank,
                          rho=1e3, lam=1e-6, a=2.0e-4, b=5.0e-7)
-    st, _ = waves.fit(prob, spec, cfg, jax.random.PRNGKey(0),
-                      num_rounds=rounds, eval_every=rounds, mode="full")
-    u, w = assemble.assemble(st.U, st.W, spec)
-    pred_off = assemble.rmse(u, w, ds.test_rows, ds.test_cols,
-                             ds.test_vals - mu)
-    return pred_off
+    res = Trainer(cfg).fit(problem, FullGD(num_rounds=rounds,
+                                           eval_every=rounds), seed=0)
+    return res.rmse()
 
 
 def main(full: bool = False, data: str | None = None, out=print):

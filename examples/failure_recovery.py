@@ -1,10 +1,13 @@
-"""Fault-tolerance demo: kill training mid-run, restart, verify exactness.
+"""Fault-tolerance demo: kill a gossip-MC fit mid-run, restart, verify
+exactness — all through the unified session API (repro.mc).
 
-Phase 1 trains N steps uninterrupted.  Phase 2 trains the same run but
-"crashes" halfway (simulated by dropping all live state), then restarts
-from the latest checkpoint and finishes.  Because the data pipeline is a
-pure function of (seed, step) and checkpoints carry params+optimizer+step,
-the two final losses agree bit-for-bit (asserted).
+Phase 1 fits uninterrupted.  Phase 2 runs the same fit but "crashes"
+mid-run (simulated by a callback raising after a checkpoint boundary —
+all live state lost), then resumes from the latest checkpoint with
+``Trainer.fit(resume_from=...)``.  The ``Checkpoint`` callback persists
+(factors, t, PRNG key, progress unit), so the resumed run replays the
+identical key stream and the two final states agree **bit-for-bit**
+(asserted).
 
     PYTHONPATH=src python examples/failure_recovery.py
 """
@@ -12,71 +15,67 @@ the two final losses agree bit-for-bit (asserted).
 import shutil
 import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
-from repro.config import TrainConfig, get_smoke_config
-from repro.data import LMTokenPipeline
-from repro.models import build_model
-from repro.models.api import Ctx
-from repro.optim import make_optimizer
-from repro.optim.optimizers import apply_updates
+from repro.config import GossipMCConfig
+from repro.data import lowrank_problem
+from repro.mc import Callback, Checkpoint, CompletionProblem, Trainer, Wave
 
-STEPS, CRASH_AT, CKPT_EVERY = 12, 7, 3
+ROUNDS, EVAL_EVERY, CRASH_AT = 12, 2, 7
+
+
+class SimulatedCrash(RuntimeError):
+    pass
+
+
+class CrashAt(Callback):
+    """Raises once the fit passes the given round — a node failure."""
+
+    def __init__(self, unit: int):
+        self.unit = unit
+
+    def on_eval(self, unit, cost, state, key):
+        if unit >= self.unit:
+            print(f"  💥 simulated node failure after round {unit} "
+                  "(all live state lost)")
+            raise SimulatedCrash()
 
 
 def main():
-    cfg = get_smoke_config("gemma2-2b")
-    model = build_model(cfg, Ctx(attn_impl="ref", cache_dtype=jnp.float32))
-    opt = make_optimizer(TrainConfig(learning_rate=1e-3, warmup_steps=0,
-                                     total_steps=STEPS))
-    pipe = LMTokenPipeline(cfg.vocab_size, 32, 4, seed=0)
-
-    @jax.jit
-    def step_fn(params, opt_state, tokens, targets):
-        loss, grads = jax.value_and_grad(model.loss)(
-            params, {"tokens": tokens, "targets": targets})
-        updates, opt_state = opt.update(grads, opt_state, params)
-        return apply_updates(params, updates), opt_state, loss
-
-    def fresh():
-        params = model.init(jax.random.PRNGKey(0))
-        return params, opt.init(params)
-
-    def run(params, opt_state, start, stop, mgr=None, crash_at=None):
-        loss = None
-        for i in range(start, stop):
-            if crash_at is not None and i == crash_at:
-                print(f"  💥 simulated node failure at step {i} "
-                      "(all live state lost)")
-                return None
-            tok, tgt = pipe.batch_at(i)
-            params, opt_state, loss = step_fn(
-                params, opt_state, jnp.asarray(tok), jnp.asarray(tgt))
-            if mgr and (i + 1) % CKPT_EVERY == 0:
-                mgr.save(i + 1, {"params": params, "opt": opt_state})
-        return params, opt_state, loss
+    cfg = GossipMCConfig(m=160, n=128, p=4, q=4, rank=4)
+    ds = lowrank_problem(cfg.m, cfg.n, cfg.rank, density=0.3, seed=0)
+    problem = CompletionProblem.from_dataset(ds, cfg.p, cfg.q, cfg.rank,
+                                             layout="sparse")
+    schedule = Wave(num_rounds=ROUNDS, eval_every=EVAL_EVERY)
 
     # phase 1: uninterrupted
-    p, o = fresh()
-    _, _, loss_ref = run(p, o, 0, STEPS)
-    print(f"uninterrupted final loss: {float(loss_ref):.6f}")
+    ref = Trainer(cfg).fit(problem, schedule, seed=0)
+    print(f"uninterrupted final cost: {ref.final_cost:.6e}")
 
-    # phase 2: crash + restart
+    # phase 2: crash + restart from the latest checkpoint
     ckpt_dir = tempfile.mkdtemp(prefix="repro_ft_")
-    mgr = CheckpointManager(ckpt_dir)
-    p, o = fresh()
-    assert run(p, o, 0, STEPS, mgr, crash_at=CRASH_AT) is None
-    step0, tree = mgr.restore(jax.eval_shape(
-        lambda: {"params": p, "opt": o}))
-    print(f"  ↻ restarted from checkpoint at step {step0}")
-    _, _, loss_rec = run(tree["params"], tree["opt"], step0, STEPS, mgr)
-    print(f"recovered final loss:     {float(loss_rec):.6f}")
+    ck = Checkpoint(ckpt_dir)
+    try:
+        # crash callback fires before the checkpoint one: the failing round
+        # is lost, recovery recomputes it from the previous boundary
+        Trainer(cfg, callbacks=[CrashAt(CRASH_AT), ck]).fit(
+            problem, schedule, seed=0)
+        raise AssertionError("crash did not fire")
+    except SimulatedCrash:
+        pass
+    unit, _, _ = ck.restore(problem)
+    print(f"  ↻ restarted from checkpoint at round {unit}")
+    rec = Trainer(cfg, callbacks=[ck]).fit(problem, schedule, seed=0,
+                                           resume_from=ck)
+    print(f"recovered final cost:     {rec.final_cost:.6e}")
 
-    np.testing.assert_allclose(float(loss_ref), float(loss_rec), atol=1e-6)
-    print("✓ restart is exact (loss matches the uninterrupted run)")
+    np.testing.assert_array_equal(np.asarray(rec.state.U),
+                                  np.asarray(ref.state.U))
+    np.testing.assert_array_equal(np.asarray(rec.state.W),
+                                  np.asarray(ref.state.W))
+    assert rec.t == ref.t
+    print("✓ restart is exact (state matches the uninterrupted run "
+          "bit-for-bit)")
     shutil.rmtree(ckpt_dir)
 
 

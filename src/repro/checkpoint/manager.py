@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing (no orbax in this environment).
 
-Design (1000-node posture, DESIGN.md §4):
+Design (1000-node posture, DESIGN.md §5):
 
 * **Atomic**: write to ``step_<n>.tmp/`` then ``os.rename`` — a crash
   mid-save can never corrupt the latest checkpoint.

@@ -103,7 +103,8 @@ def exchange_halos(U, W, row_axes, col_axes, compression="none",
 
 
 def _local_gradients(problem: Problem, U, W, halos: HaloState,
-                     row_axes, col_axes, rho, lam, use_kernel=False):
+                     row_axes, col_axes, rho, lam, use_kernel=False,
+                     method="segment", chunk=None):
     """∇L on the local tile, seam terms from halos, boundaries masked."""
 
     from repro.core.waves import full_gradients
@@ -112,7 +113,7 @@ def _local_gradients(problem: Problem, U, W, halos: HaloState,
     # full_gradient_step? No: damping is applied by the caller via step
     # scale; here we produce the exact ∇L of the local restriction.
     gU, gW = full_gradients(problem, U, W, rho=rho, lam=lam,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel, method=method, chunk=chunk)
 
     c = jax.lax.axis_index(col_axes)
     r_ = jax.lax.axis_index(row_axes)
@@ -145,6 +146,8 @@ def make_gossip_step(
     use_kernel: bool = False,
     steps_per_call: int = 1,
     layout: str = "dense",
+    method: str = "segment",
+    chunk: int | None = None,
 ):
     """Build the jitted distributed gossip round.
 
@@ -155,6 +158,9 @@ def make_gossip_step(
     ``layout="sparse"`` expects a ``SparseProblem`` (padded-COO store) and
     runs each round's f-gradients on nnz-proportional compute; the halo
     exchange is identical in both layouts — only factor edges ever travel.
+    ``method``/``chunk`` select the sparse gradient engine (see
+    ``repro.mc.EngineOptions``).  The session-level entry point is
+    ``repro.mc.Trainer.fit(problem, schedule=Gossip(...))``.
     """
 
     p, q = spec_pq
@@ -187,6 +193,7 @@ def make_gossip_step(
         gU, gW = _local_gradients(
             problem, state.U, state.W, halos, row_axes, col_axes,
             rho=rho * 0.5, lam=lam, use_kernel=use_kernel,
+            method=method, chunk=chunk,
         )
         lr = obj.gamma(state.t.astype(jnp.float32), a, b)
         new_state = State(state.U - lr * gU, state.W - lr * gW,
@@ -203,9 +210,10 @@ def make_gossip_step(
     pspec2 = P(row_axes, col_axes)
     rep = P()
     if layout == "sparse":
-        # entry tensors ((p, q, E) / (p, q)) and the sorted-layout offsets
-        # ((p, q, mb+1) / (p, q, nb+1) / (p, q, E)) all shard on (p, q)
-        problem_spec = SparseProblem(*([pspec2] * len(SparseProblem._fields)))
+        # every leaf of the store pytree — entry tensors, nnz, sorted-layout
+        # offsets — shards on its leading (p, q) axes; the store owns the
+        # structure (SparseProblem.pspec), so new fields never touch here
+        problem_spec = SparseProblem.pspec(pspec2)
     else:
         problem_spec = Problem(pspec2, pspec2)
     state_spec = State(pspec2, pspec2, rep)
@@ -263,7 +271,7 @@ def distributed_cost(mesh, problem: Problem | SparseProblem, state: State,
         axes += tuple(a) if isinstance(a, (tuple, list)) else (a,)
 
     if isinstance(problem, SparseProblem):
-        problem_spec = SparseProblem(*([pspec2] * len(SparseProblem._fields)))
+        problem_spec = SparseProblem.pspec(pspec2)
     else:
         problem_spec = Problem(pspec2, pspec2)
 

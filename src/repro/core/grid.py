@@ -36,10 +36,32 @@ class GridSpec:
     r: int
 
     def __post_init__(self) -> None:
+        # fail here, with the fix spelled out, instead of deep inside
+        # blockify / init_state with a shape error
+        if self.r <= 0:
+            raise ValueError(f"rank must be positive, got r={self.r}")
+        if self.p <= 0 or self.q <= 0:
+            raise ValueError(
+                f"grid must have positive dimensions, got {self.p}x{self.q}"
+            )
+        if self.m <= 0 or self.n <= 0:
+            raise ValueError(
+                f"matrix must have positive dimensions, got {self.m}x{self.n}"
+            )
+        if self.p > self.m or self.q > self.n:
+            raise ValueError(
+                f"grid {self.p}x{self.q} has more blocks than matrix rows/cols "
+                f"({self.m}x{self.n}); every block needs at least one row and "
+                "one column — shrink p/q or use a bigger matrix"
+            )
         if self.m % self.p or self.n % self.q:
+            pm = (self.p - self.m % self.p) % self.p
+            pn = (self.q - self.n % self.q) % self.q
             raise ValueError(
                 f"grid {self.p}x{self.q} must divide matrix {self.m}x{self.n}; "
-                "pad the matrix first (data pipeline does this)"
+                f"pad to {self.m + pm}x{self.n + pn} first — "
+                "grid.pad_to_grid(x, mask, p, q) or "
+                "repro.mc.CompletionProblem.from_dense(...) do this for you"
             )
 
     @property

@@ -148,24 +148,23 @@ def _finish_structure_grads(gu_f, gw_f, u3, w3, cf3, cu_pair, cw_pair, rho, lam)
     return gu, gw
 
 
-@partial(jax.jit, static_argnames=("rho", "lam", "use_kernel", "method"))
+@partial(jax.jit, static_argnames=("rho", "lam", "use_kernel", "method",
+                                    "chunk"))
 def structure_grads_sparse(
-    rows3, cols3, vals3, valid3, cperm3, rptr3, cptr3, u3, w3,
-    cf3, cu_pair, cw_pair,
+    entries3, u3, w3, cf3, cu_pair, cw_pair,
     rho: float, lam: float, use_kernel: bool = False, method: str = "segment",
+    chunk: int | None = None,
 ):
     """Sparse-layout twin of :func:`structure_grads`: the three blocks' f
     gradients come from their segment-sorted entry lists (O(nnz·r) streaming
-    CSR/CSC reductions); the consensus/reg/normalization tail is
-    byte-identical."""
+    CSR/CSC reductions, one stacked ``BlockEntries`` pytree of (3, ...)
+    leaves); the consensus/reg/normalization tail is byte-identical."""
 
     f, gu_f, gw_f = jax.vmap(
-        lambda rows, cols, vals, valid, cperm, rptr, cptr, u, w:
-        sparse_obj.f_grads_sparse(
-            rows, cols, vals, valid, cperm, rptr, cptr, u, w,
-            use_kernel=use_kernel, method=method,
+        lambda entries, u, w: sparse_obj.f_grads_sparse(
+            entries, u, w, use_kernel=use_kernel, method=method, chunk=chunk,
         )
-    )(rows3, cols3, vals3, valid3, cperm3, rptr3, cptr3, u3, w3)
+    )(entries3, u3, w3)
     del f
     return _finish_structure_grads(
         gu_f, gw_f, u3, w3, cf3, cu_pair, cw_pair, rho, lam

@@ -6,12 +6,17 @@ sample one structure uniformly, compute the SGD gradient of its cost
 step size γ_t = a/(1+bt).
 
 The production (parallel) paths live in waves.py / gossip.py; tests verify
-they minimize the same objective to the same floor.
+they minimize the same objective to the same floor.  The supported session
+entry point is ``repro.mc.Trainer.fit(problem, schedule="sequential")`` —
+the module-level :func:`fit` is kept as a deprecated shim over the same
+internal loop (:func:`_fit`), so legacy callers and the facade are
+bit-identical by construction.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Callable
 
 import jax
@@ -24,7 +29,8 @@ from repro.core.state import Problem, State, Tables, build_tables
 from repro.sparse.store import SparseProblem, ensure_layout
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "lam", "a", "b", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("rho", "lam", "a", "b",
+                                              "use_kernel", "method", "chunk"))
 def sgd_structure_step(
     problem: Problem,
     state: State,
@@ -36,6 +42,8 @@ def sgd_structure_step(
     a: float,
     b: float,
     use_kernel: bool = False,
+    method: str = "segment",
+    chunk: int | None = None,
 ) -> State:
     """One Algorithm-1 iteration (lines 3–4)."""
 
@@ -46,12 +54,10 @@ def sgd_structure_step(
     w3 = state.W[bi, bj]
     if isinstance(problem, SparseProblem):      # layout="sparse": O(nnz) f-part
         gu3, gw3 = obj.structure_grads_sparse(
-            problem.rows[bi, bj], problem.cols[bi, bj],
-            problem.vals[bi, bj], problem.valid[bi, bj],
-            problem.col_perm[bi, bj], problem.row_ptr[bi, bj],
-            problem.col_ptr[bi, bj], u3, w3,
+            problem.entries.gather(bi, bj), u3, w3,
             tables.cf[s], tables.cu[s], tables.cw[s],
-            rho=rho, lam=lam, use_kernel=use_kernel,
+            rho=rho, lam=lam, use_kernel=use_kernel, method=method,
+            chunk=chunk,
         )
     else:
         gu3, gw3 = obj.structure_grads(
@@ -73,6 +79,8 @@ def run_chunk(
     num_iters: int,
     cfg: GossipMCConfig,
     use_kernel: bool = False,
+    method: str = "segment",
+    chunk: int | None = None,
 ) -> State:
     """``num_iters`` Algorithm-1 iterations under one jitted scan."""
 
@@ -81,7 +89,7 @@ def run_chunk(
             sgd_structure_step(
                 problem, carry, tables, k,
                 rho=cfg.rho, lam=cfg.lam, a=cfg.a, b=cfg.b,
-                use_kernel=use_kernel,
+                use_kernel=use_kernel, method=method, chunk=chunk,
             ),
             None,
         )
@@ -91,7 +99,7 @@ def run_chunk(
     return state
 
 
-def fit(
+def _fit(
     problem: Problem | SparseProblem,
     spec: G.GridSpec,
     cfg: GossipMCConfig,
@@ -103,13 +111,21 @@ def fit(
     state: State | None = None,
     use_kernel: bool = False,
     layout: str | None = None,
+    method: str = "segment",
+    chunk: int | None = None,
+    done: int = 0,
+    progress_cb: Callable[[int, float, State, jax.Array], None] | None = None,
 ) -> tuple[State, list[tuple[int, float]]]:
     """Run Algorithm 1 for ``num_iters`` iterations, logging the paper's
     Table-2 cost every ``eval_every`` iterations.
 
     ``layout="sparse"`` runs every f-term on the padded-COO store
     (nnz-proportional); a dense ``Problem`` is converted on entry.  The
-    default infers the layout from the problem type."""
+    default infers the layout from the problem type.  ``done`` resumes the
+    chunked loop mid-run (checkpoint restore: iterations already taken;
+    ``state``/``key`` must be the values saved at that boundary) and
+    ``progress_cb(done, cost, state, key)`` fires at every eval boundary so
+    callers can checkpoint restart-exactly."""
 
     from repro.core.state import init_state
 
@@ -121,14 +137,33 @@ def fit(
         state = init_state(ik, spec)
     history: list[tuple[int, float]] = []
     eval_every = eval_every or num_iters
-    done = 0
     while done < num_iters:
-        chunk = min(eval_every, num_iters - done)
+        step_n = min(eval_every, num_iters - done)
         key, ck = jax.random.split(key)
-        state = run_chunk(problem, state, tables, ck, chunk, cfg, use_kernel)
-        done += chunk
+        state = run_chunk(problem, state, tables, ck, step_n, cfg,
+                          use_kernel, method, chunk)
+        done += step_n
         cost = float(obj.total_cost(problem, state.U, state.W, cfg.lam))
         history.append((done, cost))
         if callback:
             callback(done, cost)
+        if progress_cb:
+            progress_cb(done, cost, state, key)
     return state, history
+
+
+def fit(*args, **kwargs) -> tuple[State, list[tuple[int, float]]]:
+    """Deprecated shim — use ``repro.mc.Trainer``::
+
+        from repro.mc import CompletionProblem, Trainer
+        Trainer(cfg).fit(problem, schedule="sequential")
+
+    Same signature and bit-identical behaviour as before (it calls the same
+    internal loop the facade's ``Sequential`` schedule uses)."""
+
+    warnings.warn(
+        "repro.core.sequential.fit is deprecated; use repro.mc.Trainer.fit("
+        "problem, schedule='sequential') — see DESIGN.md §4 Session API",
+        DeprecationWarning, stacklevel=2,
+    )
+    return _fit(*args, **kwargs)

@@ -11,11 +11,16 @@ algorithm's per-update decay.
 ``full_gradient_step`` is the deterministic limit (all structures at once =
 gradient descent on the collapsed objective L — see objective.full_objective)
 and is what the distributed gossip step (gossip.py) computes per device tile.
+
+The supported session entry point is ``repro.mc.Trainer.fit(problem,
+schedule="wave" | "full")`` — the module-level :func:`fit` is a deprecated
+shim over the same internal loop (:func:`_fit`).
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Callable
 
 import jax
@@ -34,7 +39,8 @@ def wave_tables(p: int, q: int) -> list[Tables]:
     return [build_tables(p, q, w) for w in G.wave_schedule(p, q)]
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "lam", "a", "b", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("rho", "lam", "a", "b",
+                                              "use_kernel", "method", "chunk"))
 def wave_step(
     problem: Problem,
     state: State,
@@ -45,6 +51,8 @@ def wave_step(
     a: float,
     b: float,
     use_kernel: bool = False,
+    method: str = "segment",
+    chunk: int | None = None,
 ) -> State:
     """Update every structure of one wave in parallel."""
 
@@ -54,19 +62,14 @@ def wave_step(
     w3 = state.W[bi, bj]
     if isinstance(problem, SparseProblem):            # layout="sparse"
         grad = jax.vmap(
-            lambda rows, cols, vals, valid, cperm, rptr, cptr, u, w, cf, cu, cw:
-            obj.structure_grads_sparse(
-                rows, cols, vals, valid, cperm, rptr, cptr, u, w, cf, cu, cw,
-                rho=rho, lam=lam, use_kernel=use_kernel,
+            lambda entries, u, w, cf, cu, cw: obj.structure_grads_sparse(
+                entries, u, w, cf, cu, cw,
+                rho=rho, lam=lam, use_kernel=use_kernel, method=method,
+                chunk=chunk,
             )
         )
-        gu3, gw3 = grad(
-            problem.rows[bi, bj], problem.cols[bi, bj],
-            problem.vals[bi, bj], problem.valid[bi, bj],
-            problem.col_perm[bi, bj], problem.row_ptr[bi, bj],
-            problem.col_ptr[bi, bj],
-            u3, w3, tables.cf, tables.cu, tables.cw,
-        )
+        gu3, gw3 = grad(problem.entries.gather(bi, bj),
+                        u3, w3, tables.cf, tables.cu, tables.cw)
     else:
         grad = jax.vmap(
             lambda x, m, u, w, cf, cu, cw: obj.structure_grads(
@@ -87,10 +90,12 @@ def wave_step(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "lam", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("rho", "lam", "use_kernel",
+                                              "method", "chunk"))
 def full_gradients(
     problem: Problem | SparseProblem, U: jax.Array, W: jax.Array, *,
     rho: float, lam: float, use_kernel: bool = False,
+    method: str = "segment", chunk: int | None = None,
 ):
     """∇L of the collapsed objective (objective.full_objective).
 
@@ -99,7 +104,8 @@ def full_gradients(
 
     if isinstance(problem, SparseProblem):
         return sparse_obj.full_gradients_sparse(
-            problem, U, W, rho=rho, lam=lam, use_kernel=use_kernel
+            problem, U, W, rho=rho, lam=lam, use_kernel=use_kernel,
+            method=method, chunk=chunk,
         )
     _, gu_f, gw_f = jax.vmap(jax.vmap(
         lambda x, m, u, w: obj.f_grads(x, m, u, w, use_kernel=use_kernel)
@@ -110,10 +116,12 @@ def full_gradients(
     return gU, gW
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "lam", "a", "b", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("rho", "lam", "a", "b",
+                                              "use_kernel", "method", "chunk"))
 def full_gradient_step(
     problem: Problem, state: State, *,
     rho: float, lam: float, a: float, b: float, use_kernel: bool = False,
+    method: str = "segment", chunk: int | None = None,
 ) -> State:
     """One GD step on L.  The consensus part of the step is damped by 1/2
     (a block can be pulled by two pairs per axis; the paper's hyper-params
@@ -122,7 +130,7 @@ def full_gradient_step(
 
     n_struct = 2 * (state.U.shape[0] - 1) * (state.U.shape[1] - 1)
     gU, gW = full_gradients(problem, state.U, state.W, rho=rho * 0.5, lam=lam,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel, method=method, chunk=chunk)
     lr = obj.gamma(state.t.astype(jnp.float32), a, b)
     return State(
         state.U - lr * gU, state.W - lr * gW, state.t + n_struct
@@ -130,22 +138,24 @@ def full_gradient_step(
 
 
 @functools.partial(jax.jit, static_argnames=("rounds", "rho", "lam", "a", "b",
-                                              "use_kernel"))
+                                              "use_kernel", "method", "chunk"))
 def full_gd_rounds(problem: Problem, state: State, *, rounds: int,
                    rho: float, lam: float, a: float, b: float,
-                   use_kernel: bool = False) -> State:
+                   use_kernel: bool = False, method: str = "segment",
+                   chunk: int | None = None) -> State:
     """``rounds`` deterministic full-GD steps under one jitted scan
     (dispatch-free inner loop for the Table-2 horizons)."""
 
     def body(st, _):
         return full_gradient_step(problem, st, rho=rho, lam=lam, a=a, b=b,
-                                  use_kernel=use_kernel), None
+                                  use_kernel=use_kernel, method=method,
+                                  chunk=chunk), None
 
     state, _ = jax.lax.scan(body, state, None, length=rounds)
     return state
 
 
-def fit(
+def _fit(
     problem: Problem | SparseProblem,
     spec: G.GridSpec,
     cfg: GossipMCConfig,
@@ -158,6 +168,10 @@ def fit(
     state: State | None = None,
     use_kernel: bool = False,
     layout: str | None = None,
+    method: str = "segment",
+    chunk: int | None = None,
+    start_round: int = 0,
+    progress_cb: Callable[[int, float, State, jax.Array], None] | None = None,
 ) -> tuple[State, list[tuple[int, float]]]:
     """Run ``num_rounds`` rounds of wave (or full-GD) updates.
 
@@ -165,7 +179,11 @@ def fit(
     cost history is reported against the equivalent sequential iteration
     count ``t`` so curves are comparable with the paper's Table 2.
     ``layout="sparse"`` runs all f-terms on the padded-COO store; the
-    default infers the layout from the problem type.
+    default infers the layout from the problem type.  ``start_round``
+    resumes mid-run (checkpoint restore: ``state``/``key`` must be the
+    values saved at that round boundary); ``progress_cb(round, cost,
+    state, key)`` fires at every eval boundary for restart-exact
+    checkpointing.
     """
 
     from repro.core.state import init_state
@@ -182,18 +200,20 @@ def fit(
         if mode == "full":
             return full_gradient_step(
                 problem, state,
-                rho=cfg.rho, lam=cfg.lam, a=cfg.a, b=cfg.b, use_kernel=use_kernel,
+                rho=cfg.rho, lam=cfg.lam, a=cfg.a, b=cfg.b,
+                use_kernel=use_kernel, method=method, chunk=chunk,
             )
         order = jax.random.permutation(key, len(tables))
         order = np.asarray(order)  # static python order; reshuffled per round
         for w in order:
             state = wave_step(
                 problem, state, tables[int(w)],
-                rho=cfg.rho, lam=cfg.lam, a=cfg.a, b=cfg.b, use_kernel=use_kernel,
+                rho=cfg.rho, lam=cfg.lam, a=cfg.a, b=cfg.b,
+                use_kernel=use_kernel, method=method, chunk=chunk,
             )
         return state
 
-    for rd in range(num_rounds):
+    for rd in range(start_round, num_rounds):
         key, rk = jax.random.split(key)
         state = one_round(state, rk)
         if (rd + 1) % eval_every == 0 or rd == num_rounds - 1:
@@ -201,4 +221,23 @@ def fit(
             history.append((int(state.t), cost))
             if callback:
                 callback(int(state.t), cost)
+            if progress_cb:
+                progress_cb(rd + 1, cost, state, key)
     return state, history
+
+
+def fit(*args, **kwargs) -> tuple[State, list[tuple[int, float]]]:
+    """Deprecated shim — use ``repro.mc.Trainer``::
+
+        from repro.mc import CompletionProblem, Trainer
+        Trainer(cfg).fit(problem, schedule="wave")   # or "full"
+
+    Same signature and bit-identical behaviour as before (it calls the same
+    internal loop the facade's ``Wave``/``FullGD`` schedules use)."""
+
+    warnings.warn(
+        "repro.core.waves.fit is deprecated; use repro.mc.Trainer.fit("
+        "problem, schedule='wave' or 'full') — see DESIGN.md §4 Session API",
+        DeprecationWarning, stacklevel=2,
+    )
+    return _fit(*args, **kwargs)

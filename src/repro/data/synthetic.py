@@ -60,7 +60,7 @@ def movielens_proxy(
     seed: int = 0,
 ) -> MCDataset:
     """MovieLens-scale proxy: long-tail item popularity, user bias/activity,
-    ratings clipped to [1,5].  DESIGN.md §8 documents why (offline box)."""
+    ratings clipped to [1,5].  DESIGN.md §9 documents why (offline box)."""
 
     rng = np.random.default_rng(seed)
     a = rng.standard_normal((num_users, r_true)).astype(np.float32) / np.sqrt(r_true)
@@ -131,7 +131,7 @@ class LMTokenPipeline:
     Tokens follow a power-law unigram distribution with short-range
     structure (Markov-ish mixing) so losses move realistically.  Because
     batches are a pure function of (seed, step), checkpoint restart resumes
-    the exact stream — the fault-tolerance contract (DESIGN.md §4.iv).
+    the exact stream — the fault-tolerance contract (DESIGN.md §5.iv).
     """
 
     def __init__(self, vocab_size: int, seq_len: int, batch: int, seed: int = 0):

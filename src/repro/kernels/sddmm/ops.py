@@ -1,11 +1,16 @@
 """Jitted public wrappers around the SDDMM Pallas kernels.
 
-Pad the entry list to a multiple of the entry tile (padding slots get
-valid=0 so they contribute nothing), pad r to the 128-lane boundary and
-M/N to sublane multiples (zero factor rows whose gradients are exactly zero
-and are sliced away), pick interpret mode automatically off-TPU, and fall
-back to the XLA path whenever the resident working set would blow the VMEM
-budget — there the O(nnz·r) XLA paths win anyway.
+Both entry points take a single ``BlockEntries`` bundle (sparse/entries.py
+— duck-typed here so the kernel package stays a leaf) instead of the
+exploded positional aux arrays of earlier revisions.  Internally they pad
+the entry list to a multiple of the entry tile (padding slots get valid=0
+so they contribute nothing), pad r to the 128-lane boundary and M/N to
+sublane multiples (zero factor rows whose gradients are exactly zero and
+are sliced away), pick interpret mode automatically off-TPU, and fall back
+to the XLA path whenever the resident working set would blow the VMEM
+budget — there the O(nnz·r) XLA paths win anyway.  The raw
+``*_pallas`` functions keep exploded padded-array signatures: that is the
+kernel ABI (tile-aligned device buffers), not the sparse API surface.
 
 Two entry points: :func:`sddmm_factor_grad` (order-agnostic one-hot
 scatter kernel, ``kernel.py``) and :func:`sddmm_segment_grad`
@@ -46,10 +51,7 @@ def _pad_rows(a, target):
     jax.jit, static_argnames=("be", "interpret", "force_kernel")
 )
 def sddmm_factor_grad(
-    rows,
-    cols,
-    vals,
-    valid,
+    entries,
     u,
     w,
     *,
@@ -60,10 +62,11 @@ def sddmm_factor_grad(
     """(loss, gU, gW) from one block's padded COO entries — fused Pallas path.
 
     loss = Σ_k valid_k (vals_k − ⟨U[rows_k], W[cols_k]⟩)²,
-    gU/gW are the −2eW / −2eᵀU scatter-adds (see ref.py).
+    gU/gW are the −2eW / −2eᵀU scatter-adds (see ref.py).  Order-agnostic:
+    the sorted-aux fields of ``entries`` are ignored.
     """
 
-    E = rows.shape[0]
+    E = entries.rows.shape[0]
     M, r = u.shape
     N = w.shape[0]
     if interpret is None:
@@ -79,7 +82,7 @@ def sddmm_factor_grad(
     if vmem > _MAX_VMEM_BYTES and not force_kernel:
         # resident one-hot layout does not fit — gather fallback is the
         # nnz-proportional-FLOPs path and XLA handles it well.
-        return sddmm_factor_grad_ref(rows, cols, vals, valid, u, w)
+        return sddmm_factor_grad_ref(entries, u, w)
 
     def pad_e(a, fill):
         pe = e_pad - E
@@ -87,10 +90,10 @@ def sddmm_factor_grad(
             a = jnp.pad(a, (0, pe), constant_values=fill)
         return a[None, :]                       # (1, E) lane-aligned layout
 
-    rp = pad_e(rows.astype(jnp.int32), 0)
-    cp = pad_e(cols.astype(jnp.int32), 0)
-    vp = pad_e(vals.astype(jnp.float32), 0.0)
-    mp = pad_e(valid.astype(jnp.float32), 0.0)
+    rp = pad_e(entries.rows.astype(jnp.int32), 0)
+    cp = pad_e(entries.cols.astype(jnp.int32), 0)
+    vp = pad_e(entries.vals.astype(jnp.float32), 0.0)
+    mp = pad_e(entries.valid.astype(jnp.float32), 0.0)
     up = _pad_rows(jnp.pad(u.astype(jnp.float32), ((0, 0), (0, r_pad - r))), m_pad)
     wp = _pad_rows(jnp.pad(w.astype(jnp.float32), ((0, 0), (0, r_pad - r))), n_pad)
 
@@ -101,22 +104,17 @@ def sddmm_factor_grad(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("be", "interpret", "force_kernel")
+    jax.jit, static_argnames=("be", "interpret", "force_kernel", "chunk")
 )
 def sddmm_segment_grad(
-    rows,
-    cols,
-    vals,
-    valid,
-    col_perm,
-    row_ptr,
-    col_ptr,
+    entries,
     u,
     w,
     *,
     be: int = 512,
     interpret: bool | None = None,
     force_kernel: bool = False,
+    chunk: int | None = None,
 ):
     """(loss, gU, gW) from one block's *row-sorted* padded COO entries —
     Pallas segment-reduce path (see ``segment_kernel.py``).
@@ -124,9 +122,11 @@ def sddmm_segment_grad(
     One call per gradient side: gU streams the CSR view directly, gW
     streams the CSC dual view (entries gathered through ``col_perm``),
     each with its segment offsets as boundary-difference selectors.
+    ``chunk`` only affects the XLA fallback (the Pallas kernel's tile size
+    is ``be``).
     """
 
-    E = rows.shape[0]
+    E = entries.rows.shape[0]
     M, r = u.shape
     N = w.shape[0]
     if interpret is None:
@@ -148,9 +148,7 @@ def sddmm_segment_grad(
     if vmem > _MAX_VMEM_BYTES and not force_kernel:
         # resident layout does not fit — the XLA segment path is the
         # nnz-proportional fallback and already beats scatter on CPU.
-        return sddmm_segment_grad_ref(
-            rows, cols, vals, valid, col_perm, row_ptr, col_ptr, u, w
-        )
+        return sddmm_segment_grad_ref(entries, u, w, chunk=chunk)
 
     def pad_e(a, fill):
         pe = e_pad - E
@@ -169,22 +167,24 @@ def sddmm_segment_grad(
     up = _pad_rows(jnp.pad(u.astype(jnp.float32), ((0, 0), (0, r_pad - r))), m_pad)
     wp = _pad_rows(jnp.pad(w.astype(jnp.float32), ((0, 0), (0, r_pad - r))), n_pad)
 
-    rp = pad_e(rows.astype(jnp.int32), 0)
-    cp = pad_e(cols.astype(jnp.int32), 0)
-    vp = pad_e(vals.astype(jnp.float32), 0.0)
-    mp = pad_e(valid.astype(jnp.float32), 0.0)
-    lo_r, hi_r = pad_ptr(row_ptr, m_pad)
+    rp = pad_e(entries.rows.astype(jnp.int32), 0)
+    cp = pad_e(entries.cols.astype(jnp.int32), 0)
+    vp = pad_e(entries.vals.astype(jnp.float32), 0.0)
+    mp = pad_e(entries.valid.astype(jnp.float32), 0.0)
+    lo_r, hi_r = pad_ptr(entries.row_ptr, m_pad)
     loss, gu = sddmm_segment_grad_pallas(
         rp, cp, vp, mp, lo_r, hi_r, up, wp,
         side="u", be=be_eff, interpret=interpret,
     )
 
-    perm = col_perm.astype(jnp.int32)
-    rc = pad_e(jnp.take(rows.astype(jnp.int32), perm, mode="clip"), 0)
-    cc = pad_e(jnp.take(cols.astype(jnp.int32), perm, mode="clip"), 0)
-    vc = pad_e(jnp.take(vals.astype(jnp.float32), perm, mode="clip"), 0.0)
-    mc = pad_e(jnp.take(valid.astype(jnp.float32), perm, mode="clip"), 0.0)
-    lo_c, hi_c = pad_ptr(col_ptr, n_pad)
+    perm = entries.col_perm.astype(jnp.int32)
+    rc = pad_e(jnp.take(entries.rows.astype(jnp.int32), perm, mode="clip"), 0)
+    cc = pad_e(jnp.take(entries.cols.astype(jnp.int32), perm, mode="clip"), 0)
+    vc = pad_e(jnp.take(entries.vals.astype(jnp.float32), perm, mode="clip"),
+               0.0)
+    mc = pad_e(jnp.take(entries.valid.astype(jnp.float32), perm, mode="clip"),
+               0.0)
+    lo_c, hi_c = pad_ptr(entries.col_ptr, n_pad)
     _, gw = sddmm_segment_grad_pallas(
         rc, cc, vc, mc, lo_c, hi_c, up, wp,
         side="w", be=be_eff, interpret=interpret,

@@ -1,9 +1,11 @@
 """Gather-based XLA reference for the sparse (SDDMM) factor gradient.
 
-Operates on one block's padded COO entry list.  Entries: intra-block
-``rows``/``cols`` (int32), observed values ``vals`` and a ``valid`` 0/1 mask
-(padding slots carry valid=0 and contribute nothing).  With factors
-U (M×r), W (N×r):
+Operates on one block's padded COO entries, passed as a single
+``BlockEntries`` bundle (``sparse/entries.py`` — duck-typed here so this
+module stays a dependency-free leaf): intra-block ``rows``/``cols``
+(int32), observed values ``vals`` and a ``valid`` 0/1 mask (padding slots
+carry valid=0 and contribute nothing).  The sorted-aux fields are ignored —
+this path is order-agnostic.  With factors U (M×r), W (N×r):
 
     e_k     = valid_k · (vals_k − ⟨U[rows_k], W[cols_k]⟩)     (residual at entry k)
     f       = Σ_k e_k²
@@ -22,26 +24,30 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def sddmm_residuals(rows, cols, vals, valid, u, w):
+def sddmm_residuals(entries, u, w):
     """Residuals at the observed entries only: (E,) float32."""
 
     uf = u.astype(jnp.float32)
     wf = w.astype(jnp.float32)
-    pred = jnp.sum(uf[rows] * wf[cols], axis=-1)
-    return valid.astype(jnp.float32) * (vals.astype(jnp.float32) - pred)
+    pred = jnp.sum(uf[entries.rows] * wf[entries.cols], axis=-1)
+    return entries.valid.astype(jnp.float32) * (
+        entries.vals.astype(jnp.float32) - pred
+    )
 
 
-def sddmm_factor_grad_ref(rows, cols, vals, valid, u, w):
+def sddmm_factor_grad_ref(entries, u, w):
     """(loss, gU, gW) from the padded entry list; nnz-proportional."""
 
     uf = u.astype(jnp.float32)
     wf = w.astype(jnp.float32)
-    ue = uf[rows]                                   # (E, r) gather
-    we = wf[cols]
+    ue = uf[entries.rows]                           # (E, r) gather
+    we = wf[entries.cols]
     pred = jnp.sum(ue * we, axis=-1)
-    e = valid.astype(jnp.float32) * (vals.astype(jnp.float32) - pred)
+    e = entries.valid.astype(jnp.float32) * (
+        entries.vals.astype(jnp.float32) - pred
+    )
     loss = jnp.sum(e * e)
     d = -2.0 * e[:, None]
-    gu = jnp.zeros(uf.shape, jnp.float32).at[rows].add(d * we)
-    gw = jnp.zeros(wf.shape, jnp.float32).at[cols].add(d * ue)
+    gu = jnp.zeros(uf.shape, jnp.float32).at[entries.rows].add(d * we)
+    gw = jnp.zeros(wf.shape, jnp.float32).at[entries.cols].add(d * ue)
     return loss, gu.astype(u.dtype), gw.astype(w.dtype)

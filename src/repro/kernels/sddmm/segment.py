@@ -64,19 +64,27 @@ def segment_reduce(contrib, ptr, chunk: int = SEG_CHUNK):
     return s[1:] - s[:-1]
 
 
-def sddmm_segment_grad_ref(rows, cols, vals, valid, col_perm, row_ptr, col_ptr,
-                           u, w, chunk: int = SEG_CHUNK):
-    """(loss, gU, gW) from one block's row-sorted entry list; O(nnz·r)."""
+def sddmm_segment_grad_ref(entries, u, w, chunk: int | None = None):
+    """(loss, gU, gW) from one block's row-sorted entry list; O(nnz·r).
 
+    ``entries`` is a ``BlockEntries`` bundle (sparse/entries.py — duck-typed
+    so this module stays a leaf) whose sorted-aux fields must be attached.
+    ``chunk`` overrides the segment-reduce chunk size (default SEG_CHUNK) —
+    an engine tunable swept by ``benchmarks/sparse_vs_dense.py``."""
+
+    chunk = SEG_CHUNK if chunk is None else chunk
     uf = u.astype(jnp.float32)
     wf = w.astype(jnp.float32)
-    ue = jnp.take(uf, rows, axis=0, indices_are_sorted=True, mode="clip")
-    we = jnp.take(wf, cols, axis=0, mode="clip")
+    ue = jnp.take(uf, entries.rows, axis=0, indices_are_sorted=True,
+                  mode="clip")
+    we = jnp.take(wf, entries.cols, axis=0, mode="clip")
     pred = jnp.sum(ue * we, axis=-1)
-    e = valid.astype(jnp.float32) * (vals.astype(jnp.float32) - pred)
+    e = entries.valid.astype(jnp.float32) * (
+        entries.vals.astype(jnp.float32) - pred
+    )
     loss = jnp.sum(e * e)
     d = -2.0 * e[:, None]
-    gu = segment_reduce(d * we, row_ptr, chunk)
-    cw = jnp.take(d * ue, col_perm, axis=0, mode="clip")
-    gw = segment_reduce(cw, col_ptr, chunk)
+    gu = segment_reduce(d * we, entries.row_ptr, chunk)
+    cw = jnp.take(d * ue, entries.col_perm, axis=0, mode="clip")
+    gw = segment_reduce(cw, entries.col_ptr, chunk)
     return loss, gu.astype(u.dtype), gw.astype(w.dtype)

@@ -1,0 +1,56 @@
+"""``repro.mc`` — the unified matrix-completion session API.
+
+Three nouns over the whole engine (DESIGN.md §4 Session API):
+
+    CompletionProblem — owns the data (dense or sorted-COO layout), the
+                        grid spec, and the kernel/engine options
+    Trainer           — one ``fit(problem, schedule=...)`` with pluggable
+                        Schedule strategies (Sequential / Wave / FullGD /
+                        Gossip) and a callback protocol (EvalRMSE,
+                        BenchLogger, Checkpoint)
+    FitResult         — final State, loss trace, wall-clock stats, and
+                        ``.to_recommend_index()`` bridging into
+                        ``serve.recommend``
+
+The legacy entry points (``sequential.fit``, ``waves.fit``,
+``gossip.make_gossip_step`` + hand-rolled loops) remain as deprecated
+shims over the same internals; new code goes through this package.
+"""
+
+from repro.mc.callbacks import (
+    BenchLogger,
+    Callback,
+    Checkpoint,
+    EvalRMSE,
+    restore_session,
+)
+from repro.mc.problem import CompletionProblem, EngineOptions
+from repro.mc.schedules import (
+    FullGD,
+    Gossip,
+    Schedule,
+    Sequential,
+    Wave,
+    make_schedule,
+)
+from repro.mc.trainer import FitResult, Trainer
+from repro.sparse.entries import BlockEntries
+
+__all__ = [
+    "BenchLogger",
+    "BlockEntries",
+    "Callback",
+    "Checkpoint",
+    "CompletionProblem",
+    "EngineOptions",
+    "EvalRMSE",
+    "FitResult",
+    "FullGD",
+    "Gossip",
+    "Schedule",
+    "Sequential",
+    "Trainer",
+    "Wave",
+    "make_schedule",
+    "restore_session",
+]

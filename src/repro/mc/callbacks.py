@@ -1,0 +1,170 @@
+"""Callback protocol for ``Trainer.fit`` + the three stock callbacks.
+
+Hooks (all optional — subclass and override what you need):
+
+    on_fit_start(problem, schedule, cfg)  — before the first update
+    on_eval(unit, cost, state, key)       — at every eval boundary; ``unit``
+                                            is in the schedule's own units
+                                            (iterations or rounds), ``key``
+                                            is the live PRNG key at that
+                                            boundary (what a restart needs)
+    on_fit_end(result)                    — with the finished FitResult
+
+Stock callbacks:
+
+    EvalRMSE   — held-out completion RMSE trace (assemble + stream-eval)
+    BenchLogger— wall-clock + cost trace, printed and/or collected
+    Checkpoint — restart-exact save/restore via CheckpointManager: persists
+                 (U, W, t, key, unit) so ``Trainer.fit(resume_from=...)``
+                 replays the identical key stream from the saved boundary
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import assemble as asm
+from repro.core.state import State
+
+
+class Callback:
+    """Base: every hook is a no-op."""
+
+    def on_fit_start(self, problem, schedule, cfg) -> None:
+        pass
+
+    def on_eval(self, unit: int, cost: float, state: State,
+                key: jax.Array) -> None:
+        pass
+
+    def on_fit_end(self, result) -> None:
+        pass
+
+
+class EvalRMSE(Callback):
+    """Held-out completion RMSE at every eval boundary.
+
+    Uses the problem's attached dataset (``CompletionProblem.from_dataset``)
+    unless explicit test triplets are given.  The trace accumulates as
+    ``(t, rmse)`` pairs in ``.history``; ``log`` (e.g. ``print``) gets one
+    formatted line per point."""
+
+    def __init__(self, test_rows=None, test_cols=None, test_vals=None,
+                 log: Optional[Callable[[str], None]] = None):
+        self._given = (test_rows, test_cols, test_vals)
+        self.log = log
+        self.history: list[tuple[int, float]] = []
+        self._problem = None
+        self._triplets = None
+
+    def on_fit_start(self, problem, schedule, cfg) -> None:
+        # resolved per fit, never cached across problems: the same callback
+        # instance may serve several fits on different problems
+        self._problem = problem
+        if self._given[0] is not None:
+            self._triplets = self._given
+            return
+        ds = problem.dataset
+        if ds is None:
+            raise ValueError(
+                "EvalRMSE needs test triplets: attach a dataset "
+                "(CompletionProblem.from_dataset) or pass "
+                "test_rows/test_cols/test_vals explicitly"
+            )
+        self._triplets = (ds.test_rows, ds.test_cols,
+                          ds.test_vals - problem.mu)
+
+    def on_eval(self, unit, cost, state, key) -> None:
+        u, w = asm.assemble(state.U, state.W, self._problem.spec)
+        rows, cols, vals = self._triplets
+        r = asm.rmse(u, w, rows, cols, vals)
+        self.history.append((int(state.t), r))
+        if self.log:
+            self.log(f"  t={int(state.t):>8d}  cost={cost:.4e}  rmse={r:.4f}")
+
+
+class BenchLogger(Callback):
+    """Wall-clock + cost trace: ``.history`` holds (unit, t, cost,
+    seconds-since-fit-start) rows; ``log`` gets one line per eval."""
+
+    def __init__(self, log: Optional[Callable[[str], None]] = print):
+        self.log = log
+        self.history: list[tuple[int, int, float, float]] = []
+        self._t0 = 0.0
+
+    def on_fit_start(self, problem, schedule, cfg) -> None:
+        self._t0 = time.perf_counter()
+
+    def on_eval(self, unit, cost, state, key) -> None:
+        dt = time.perf_counter() - self._t0
+        self.history.append((unit, int(state.t), cost, dt))
+        if self.log:
+            self.log(f"  [{dt:8.2f}s] unit={unit:>8d} t={int(state.t):>8d} "
+                     f"cost={cost:.4e}")
+
+
+class Checkpoint(Callback):
+    """Restart-exact checkpointing through :class:`CheckpointManager`.
+
+    Saves ``{U, W, t, key, unit}`` every ``every``-th eval boundary
+    (atomic rename, retention-GC'd).  ``Trainer.fit(resume_from=...)``
+    accepts this callback, a manager, or a directory path and continues
+    the run from the saved boundary with the identical PRNG stream — the
+    recovered final state matches the uninterrupted run bit-for-bit
+    (``examples/failure_recovery.py`` asserts it)."""
+
+    def __init__(self, directory_or_manager, every: int = 1):
+        if isinstance(directory_or_manager, CheckpointManager):
+            self.manager = directory_or_manager
+        else:
+            self.manager = CheckpointManager(str(directory_or_manager))
+        if every <= 0:
+            raise ValueError(f"every must be positive, got {every}")
+        self.every = every
+        self._evals = 0
+
+    def on_fit_start(self, problem, schedule, cfg) -> None:
+        self._evals = 0
+
+    def on_eval(self, unit, cost, state, key) -> None:
+        self._evals += 1
+        if self._evals % self.every:
+            return
+        self.manager.save(unit, {
+            "U": state.U, "W": state.W, "t": state.t,
+            "key": key, "unit": jnp.asarray(unit, jnp.int32),
+        })
+
+    def restore(self, problem) -> Optional[tuple[int, State, jax.Array]]:
+        """(unit, state, key) from the latest checkpoint, or None."""
+
+        return restore_session(self.manager, problem)
+
+
+def restore_session(manager: CheckpointManager, problem
+                    ) -> Optional[tuple[int, State, jax.Array]]:
+    """Load the latest ``Checkpoint``-format session checkpoint."""
+
+    spec = problem.spec
+    like = {
+        "U": jax.ShapeDtypeStruct((spec.p, spec.q, spec.mb, spec.r),
+                                  jnp.float32),
+        "W": jax.ShapeDtypeStruct((spec.p, spec.q, spec.nb, spec.r),
+                                  jnp.float32),
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+        "key": jax.ShapeDtypeStruct(np.shape(jax.random.PRNGKey(0)),
+                                    jnp.uint32),
+        "unit": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    restored = manager.restore(like)
+    if restored is None:
+        return None
+    _, tree = restored
+    state = State(tree["U"], tree["W"], tree["t"])
+    return int(tree["unit"]), state, tree["key"]

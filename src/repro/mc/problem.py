@@ -1,0 +1,274 @@
+"""``CompletionProblem`` — the one noun that owns matrix-completion data.
+
+Before this facade existed, every call site juggled four things by hand:
+the blockified data (``Problem`` or ``SparseProblem``), the ``GridSpec``,
+a ``layout=`` switch threaded through every fit entry point, and the
+engine knobs (Pallas on/off, gradient method, segment chunk, bucket size)
+scattered across keyword arguments.  ``CompletionProblem`` bundles all of
+it: construct once, hand to ``Trainer.fit`` with any schedule.
+
+    problem = CompletionProblem.from_dense(x, mask, p=4, q=4, rank=8,
+                                           layout="sparse")
+    problem = CompletionProblem.from_entries(rows, cols, vals, shape=(m, n),
+                                             p=4, q=4, rank=8)
+    problem = CompletionProblem.from_dataset(ds, p=4, q=4, rank=8)
+
+``EngineOptions`` is the kernel/engine configuration (``with_engine``
+derives a tweaked copy) — including the segment-reduce ``chunk`` size that
+used to be hardcoded in ``kernels/sddmm/segment.py`` and is swept by
+``benchmarks/sparse_vs_dense.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+import functools
+
+from repro.core import grid as G
+from repro.core import objective as core_obj
+from repro.core import waves as core_waves
+from repro.core.state import Problem, State, make_problem
+from repro.data.synthetic import MCDataset
+from repro import sparse as sparse_mod
+from repro.sparse.store import SparseProblem
+
+
+@functools.partial(jax.jit, static_argnames=("lam",))
+def _total_cost(data, U, W, lam: float):
+    return core_obj.total_cost(data, U, W, lam)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """How gradients are computed — orthogonal to what is computed.
+
+    use_kernel : run the Pallas kernels (auto-interpret off-TPU)
+    method     : "segment" (sorted CSR/CSC streaming, default) | "scatter"
+    chunk      : segment-reduce chunk size; None = kernels' SEG_CHUNK.
+                 Swept by ``benchmarks/sparse_vs_dense.py --chunks``.
+    bucket     : padded-COO capacity quantum for sparse ingest
+    """
+
+    use_kernel: bool = False
+    method: str = "segment"
+    chunk: Optional[int] = None
+    bucket: int = sparse_mod.DEFAULT_BUCKET
+
+    def __post_init__(self) -> None:
+        if self.method not in ("segment", "scatter"):
+            raise ValueError(
+                f"unknown method {self.method!r}; 'segment' or 'scatter'"
+            )
+        if self.chunk is not None and self.chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {self.chunk}")
+        if self.bucket <= 0:
+            raise ValueError(f"bucket must be positive, got {self.bucket}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletionProblem:
+    """Immutable bundle of blockified data + grid spec + engine options.
+
+    ``num_users``/``num_items`` are the true (pre-grid-padding) shape;
+    ``seen_coo`` holds the observed (user, item) pairs for serve-time
+    exclusion; ``mu`` is the observed-mean offset subtracted when
+    ``mean_center=True`` (add it back when reporting predictions);
+    ``dataset`` (optional) carries held-out test entries for eval-RMSE.
+    """
+
+    data: Union[Problem, SparseProblem]
+    spec: G.GridSpec
+    engine: EngineOptions = EngineOptions()
+    num_users: int = 0
+    num_items: int = 0
+    seen_coo: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    mu: float = 0.0
+    dataset: Optional[MCDataset] = None
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+
+    @classmethod
+    def from_dense(
+        cls,
+        x: np.ndarray,
+        mask: np.ndarray,
+        p: int,
+        q: int,
+        rank: int,
+        *,
+        layout: str = "dense",
+        engine: EngineOptions | None = None,
+        mean_center: bool = False,
+        dataset: MCDataset | None = None,
+    ) -> "CompletionProblem":
+        """From a dense (m, n) matrix + 0/1 observation mask.  Pads to the
+        grid, blockifies, and converts to the sparse store when
+        ``layout="sparse"``."""
+
+        if layout not in ("dense", "sparse"):
+            raise ValueError(
+                f"unknown layout {layout!r}; expected 'dense' or 'sparse'"
+            )
+        engine = engine or EngineOptions()
+        x = np.asarray(x, np.float32)
+        mask = np.asarray(mask, np.float32)
+        if x.shape != mask.shape or x.ndim != 2:
+            raise ValueError(
+                f"x and mask must be equal-shape 2-D arrays, got "
+                f"{x.shape} vs {mask.shape}"
+            )
+        m0, n0 = x.shape
+        xp, mp, m, n = G.pad_to_grid(x, mask, p, q)
+        spec = G.GridSpec(m, n, p, q, rank)
+        mu = 0.0
+        if mean_center:
+            mu = float((xp * mp).sum() / max(mp.sum(), 1.0))
+            xp = xp - mu                       # make_problem re-masks (x*mask)
+        dense = make_problem(xp, mp, spec)
+        data: Union[Problem, SparseProblem] = dense
+        if layout == "sparse":
+            data = sparse_mod.from_blocks(dense.xb, dense.maskb, engine.bucket)
+        rows, cols = np.nonzero(mask)
+        return cls(data=data, spec=spec, engine=engine, num_users=m0,
+                   num_items=n0, seen_coo=(rows.astype(np.int64),
+                                           cols.astype(np.int64)),
+                   mu=mu, dataset=dataset)
+
+    @classmethod
+    def from_entries(
+        cls,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: Tuple[int, int],
+        p: int,
+        q: int,
+        rank: int,
+        *,
+        layout: str = "sparse",
+        engine: EngineOptions | None = None,
+        mean_center: bool = False,
+        dataset: MCDataset | None = None,
+    ) -> "CompletionProblem":
+        """From a global COO triplet list — the streaming-ingestion path.
+        ``layout="sparse"`` (default) never materializes the dense matrix;
+        ``layout="dense"`` scatters into dense tensors first."""
+
+        engine = engine or EngineOptions()
+        m0, n0 = shape
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        vals = np.asarray(vals, np.float32)
+        mu = float(vals.mean()) if (mean_center and len(vals)) else 0.0
+        if layout == "dense":
+            x = np.zeros((m0, n0), np.float32)
+            mask = np.zeros((m0, n0), np.float32)
+            x[rows, cols] = vals
+            mask[rows, cols] = 1.0
+            return cls.from_dense(x, mask, p, q, rank, layout="dense",
+                                  engine=engine, mean_center=mean_center,
+                                  dataset=dataset)
+        if layout != "sparse":
+            raise ValueError(
+                f"unknown layout {layout!r}; expected 'dense' or 'sparse'"
+            )
+        sp, (m, n) = sparse_mod.from_entries(
+            rows, cols, vals - mu if mu else vals, m0, n0, p, q, engine.bucket
+        )
+        spec = G.GridSpec(m, n, p, q, rank)
+        order = np.argsort(rows, kind="stable")   # seen table wants user-sorted
+        return cls(data=sp, spec=spec, engine=engine, num_users=m0,
+                   num_items=n0, seen_coo=(rows[order], cols[order]),
+                   mu=mu, dataset=dataset)
+
+    @classmethod
+    def from_dataset(
+        cls,
+        ds: MCDataset,
+        p: int,
+        q: int,
+        rank: int,
+        *,
+        layout: str = "dense",
+        engine: EngineOptions | None = None,
+        mean_center: bool = False,
+    ) -> "CompletionProblem":
+        """From an ``MCDataset`` (synthetic low-rank, MovieLens proxy, or a
+        loaded ratings file); keeps the held-out test split attached for
+        eval-RMSE callbacks and ``FitResult.rmse()``."""
+
+        return cls.from_dense(ds.x, ds.train_mask, p, q, rank, layout=layout,
+                              engine=engine, mean_center=mean_center,
+                              dataset=ds)
+
+    # ------------------------------------------------------------------ #
+    # derived views
+    # ------------------------------------------------------------------ #
+
+    @property
+    def layout(self) -> str:
+        return "sparse" if isinstance(self.data, SparseProblem) else "dense"
+
+    @property
+    def density(self) -> float:
+        if isinstance(self.data, SparseProblem):
+            return sparse_mod.density(self.data, self.spec)
+        return float(np.asarray(self.data.maskb).mean())
+
+    def with_engine(self, **overrides) -> "CompletionProblem":
+        """Copy with tweaked EngineOptions (data/spec shared, zero-copy).
+        Note ``bucket`` only affects future ingest, not the built store."""
+
+        return dataclasses.replace(
+            self, engine=dataclasses.replace(self.engine, **overrides)
+        )
+
+    def with_layout(self, layout: str) -> "CompletionProblem":
+        """Copy converted to the requested layout (no-op when it matches)."""
+
+        if layout == self.layout:
+            return self
+        if layout == "sparse":
+            data = sparse_mod.from_blocks(
+                self.data.xb, self.data.maskb, self.engine.bucket
+            )
+        elif layout == "dense":
+            xb, maskb = sparse_mod.to_dense(self.data, self.spec.mb,
+                                            self.spec.nb)
+            data = Problem(jax.numpy.asarray(xb), jax.numpy.asarray(maskb))
+        else:
+            raise ValueError(
+                f"unknown layout {layout!r}; expected 'dense' or 'sparse'"
+            )
+        return dataclasses.replace(self, data=data)
+
+    # ------------------------------------------------------------------ #
+    # engine-option-respecting evaluation (what benchmarks time)
+    # ------------------------------------------------------------------ #
+
+    def total_cost(self, state: State, lam: float) -> float:
+        """Paper Table-2 cost at ``state`` (layout-dispatching, jitted)."""
+
+        return float(self.total_cost_device(state, lam))
+
+    def total_cost_device(self, state: State, lam: float) -> jax.Array:
+        """Same cost as a device scalar (no host sync) — what benchmarks
+        time so the transfer does not serialize dispatch."""
+
+        return _total_cost(self.data, state.U, state.W, lam)
+
+    def full_gradients(self, state: State, *, rho: float, lam: float):
+        """∇L of the collapsed objective with this problem's engine options."""
+
+        return core_waves.full_gradients(
+            self.data, state.U, state.W, rho=rho, lam=lam,
+            use_kernel=self.engine.use_kernel, method=self.engine.method,
+            chunk=self.engine.chunk,
+        )

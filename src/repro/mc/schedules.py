@@ -1,0 +1,203 @@
+"""Pluggable execution schedules for ``Trainer.fit``.
+
+One scheduler-agnostic problem abstraction over interchangeable update
+orders (the NOMAD / Riemannian-gossip presentation): every schedule
+consumes the same ``CompletionProblem`` + ``GossipMCConfig`` + PRNG key and
+produces the same ``(State, history)`` pair, so callers swap execution
+strategies without touching data plumbing.
+
+    Sequential — Algorithm 1 verbatim: one random structure per iteration
+    Wave       — ≤8 conflict-free parity waves per round, vectorized
+    FullGD     — deterministic limit: all structures at once (GD on L)
+    Gossip     — distributed shard_map rounds with ppermute halo exchange
+
+Each schedule wraps the corresponding internal loop in ``core/`` (the same
+code the deprecated ``sequential.fit`` / ``waves.fit`` shims call), so
+facade and legacy paths are bit-identical given the same key.
+
+The ``run`` contract: ``run(problem, cfg, key, state=None, done=0,
+eval_cb=None)`` where ``done`` (in the schedule's own units — iterations
+or rounds) resumes a checkpointed run and ``eval_cb(unit, cost, state,
+key)`` fires at every eval boundary (the restart-exact checkpoint hook).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+
+from repro.config import GossipMCConfig
+from repro.core import gossip as core_gossip
+from repro.core import sequential as core_sequential
+from repro.core import waves as core_waves
+from repro.core.state import State, init_state
+from repro.mc.problem import CompletionProblem
+
+EvalCb = Optional[Callable[[int, float, State, jax.Array], None]]
+
+
+class Schedule:
+    """Strategy interface: subclasses define ``name``, ``units`` and
+    ``run``."""
+
+    name = "abstract"
+    units = "rounds"
+
+    def run(self, problem: CompletionProblem, cfg: GossipMCConfig,
+            key: jax.Array, *, state: State | None = None, done: int = 0,
+            eval_cb: EvalCb = None) -> tuple[State, list[tuple[int, float]]]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Sequential(Schedule):
+    """Paper Algorithm 1: one uniformly sampled structure per iteration."""
+
+    num_iters: int = 20_000
+    eval_every: int = 0
+
+    name = "sequential"
+    units = "iterations"
+
+    def run(self, problem, cfg, key, *, state=None, done=0, eval_cb=None):
+        eng = problem.engine
+        return core_sequential._fit(
+            problem.data, problem.spec, cfg, key,
+            num_iters=self.num_iters, eval_every=self.eval_every,
+            state=state, use_kernel=eng.use_kernel, method=eng.method,
+            chunk=eng.chunk, done=done, progress_cb=eval_cb,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Wave(Schedule):
+    """Parity-wave rounds: all non-overlapping structures of a wave updated
+    in one vectorized conflict-free step, waves in random order."""
+
+    num_rounds: int = 200
+    eval_every: int = 0
+
+    name = "wave"
+    units = "rounds"
+    _mode = "wave"
+
+    def run(self, problem, cfg, key, *, state=None, done=0, eval_cb=None):
+        eng = problem.engine
+        return core_waves._fit(
+            problem.data, problem.spec, cfg, key,
+            num_rounds=self.num_rounds, eval_every=self.eval_every,
+            mode=self._mode, state=state, use_kernel=eng.use_kernel,
+            method=eng.method, chunk=eng.chunk, start_round=done,
+            progress_cb=eval_cb,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FullGD(Wave):
+    """Deterministic limit: every structure at once = GD on the collapsed
+    objective L (what each gossip device computes per tile)."""
+
+    name = "full"
+    _mode = "full"
+
+
+@dataclasses.dataclass(frozen=True)
+class Gossip(Schedule):
+    """Distributed full-GD rounds over a device mesh: shard_map tiles the
+    (p, q) block grid, factor edges travel by ``ppermute`` (one ICI hop),
+    bounded staleness and optional int8/top-k message compression ride on
+    the halo exchange.  ``mesh=None`` builds a 1×1 mesh on the default
+    device — the single-host degenerate case, numerically identical to
+    ``FullGD`` (parity-tested).
+
+    Checkpoint resume restores factors only; with ``staleness == 1`` and no
+    compression the halos are rebuilt on the first resumed round, so resume
+    is exact.  Stale-halo / error-feedback state is intentionally not
+    persisted (a restarted node re-gossips, matching the paper's fault
+    model)."""
+
+    num_rounds: int = 200
+    eval_every: int = 0
+    mesh: Any = None
+    row_axes: Any = "data"
+    col_axes: Any = "model"
+    staleness: int = 1
+    compression: str = "none"
+    topk_fraction: float = 0.25
+
+    name = "gossip"
+    units = "rounds"
+
+    def _mesh(self):
+        if self.mesh is not None:
+            return self.mesh
+        from repro.compat import make_mesh
+
+        return make_mesh((1, 1), ("data", "model"))
+
+    def run(self, problem, cfg, key, *, state=None, done=0, eval_cb=None):
+        eng = problem.engine
+        mesh = self._mesh()
+        if state is None:
+            key, ik = jax.random.split(key)
+            state = init_state(ik, problem.spec)
+        carry = core_gossip.init_carry(state)
+        eval_every = self.eval_every or self.num_rounds
+        steps: dict[int, Any] = {}
+
+        def step_for(n: int):
+            if n not in steps:
+                steps[n], _ = core_gossip.make_gossip_step(
+                    mesh, (problem.spec.p, problem.spec.q), cfg,
+                    row_axes=self.row_axes, col_axes=self.col_axes,
+                    staleness=self.staleness, compression=self.compression,
+                    topk_fraction=self.topk_fraction,
+                    use_kernel=eng.use_kernel, steps_per_call=n,
+                    layout=problem.layout, method=eng.method, chunk=eng.chunk,
+                )
+            return steps[n]
+
+        history: list[tuple[int, float]] = []
+        rd = done
+        while rd < self.num_rounds:
+            n = min(eval_every - rd % eval_every, self.num_rounds - rd)
+            carry = step_for(n)(problem.data, carry)
+            rd += n
+            cost = float(core_gossip.distributed_cost(
+                mesh, problem.data, carry.state, cfg.lam,
+                row_axes=self.row_axes, col_axes=self.col_axes,
+            ))
+            history.append((int(carry.state.t), cost))
+            if eval_cb:
+                eval_cb(rd, cost, carry.state, key)
+        return carry.state, history
+
+
+_BY_NAME = {
+    "sequential": Sequential,
+    "wave": Wave,
+    "full": FullGD,
+    "full_gd": FullGD,
+    "gossip": Gossip,
+}
+
+
+def make_schedule(spec: Union[str, Schedule], **overrides) -> Schedule:
+    """Resolve a schedule: pass a ``Schedule`` through, or build one from
+    its name (``"sequential" | "wave" | "full" | "gossip"``) with default
+    sizes overridable by keyword."""
+
+    if isinstance(spec, Schedule):
+        if overrides:
+            return dataclasses.replace(spec, **overrides)
+        return spec
+    try:
+        cls = _BY_NAME[spec]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown schedule {spec!r}; expected one of "
+            f"{sorted(_BY_NAME)} or a Schedule instance"
+        ) from None
+    return cls(**overrides)

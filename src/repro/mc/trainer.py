@@ -1,0 +1,193 @@
+"""``Trainer`` + ``FitResult`` — the session layer over the schedules.
+
+One ``fit`` for every execution strategy:
+
+    from repro.mc import CompletionProblem, Trainer, Wave
+
+    problem = CompletionProblem.from_dataset(ds, p=4, q=4, rank=8,
+                                             layout="sparse")
+    result = Trainer(cfg).fit(problem, schedule="wave", seed=0)
+    result = Trainer(cfg).fit(problem, Wave(num_rounds=500, eval_every=50))
+
+    svc = result.to_service(k=10)          # straight into serving
+    items, scores = svc.recommend(user_ids)
+
+``FitResult`` carries the final ``State``, the (t, cost) loss trace,
+wall-clock stats, and the bridges into evaluation (``factors``, ``rmse``)
+and serving (``to_recommend_index`` → ``serve.recommend``).
+
+Key discipline: with the same seed, ``Trainer.fit`` is bit-identical to
+the legacy ``sequential.fit`` / ``waves.fit`` entry points (the schedules
+call the same internal loops) — pinned by the facade-vs-direct parity
+tests.  Checkpoint resume (``resume_from=``) restores (state, key, unit)
+saved by the ``Checkpoint`` callback and replays the identical stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import GossipMCConfig
+from repro.core import assemble as asm
+from repro.core.state import State
+from repro.mc.callbacks import Callback, Checkpoint, restore_session
+from repro.mc.problem import CompletionProblem
+from repro.mc.schedules import Schedule, make_schedule
+from repro.serve.recommend import RecommendIndex, RecommendService, build_index
+
+
+@dataclasses.dataclass
+class FitResult:
+    """Everything a finished fit produced."""
+
+    state: State
+    history: list            # (t, cost) pairs at eval boundaries
+    wall_time: float         # seconds inside the schedule loop
+    schedule: str            # schedule name ("sequential" | ... | "gossip")
+    problem: CompletionProblem
+
+    @property
+    def final_cost(self) -> float:
+        return self.history[-1][1] if self.history else float("nan")
+
+    @property
+    def t(self) -> int:
+        """Structure-update count (the paper's iteration clock)."""
+
+        return int(self.state.t)
+
+    def factors(self) -> tuple[jax.Array, jax.Array]:
+        """Consensus-assembled global (m, r) / (n, r) factors."""
+
+        return asm.assemble(self.state.U, self.state.W, self.problem.spec)
+
+    def consensus_error(self) -> tuple[float, float]:
+        return asm.consensus_error(self.state.U, self.state.W)
+
+    def rmse(self, rows=None, cols=None, vals=None) -> float:
+        """Held-out completion RMSE; defaults to the problem's attached
+        dataset test split (``vals`` are compared in the problem's
+        mean-centered frame automatically)."""
+
+        if rows is None:
+            ds = self.problem.dataset
+            if ds is None:
+                raise ValueError(
+                    "no test triplets: attach a dataset "
+                    "(CompletionProblem.from_dataset) or pass "
+                    "rows/cols/vals explicitly"
+                )
+            rows, cols, vals = ds.test_rows, ds.test_cols, ds.test_vals
+        u, w = self.factors()
+        return asm.rmse(u, w, rows, cols,
+                        np.asarray(vals, np.float32) - self.problem.mu)
+
+    def to_recommend_index(self) -> RecommendIndex:
+        """Bridge straight into ``serve.recommend``: assemble the factors,
+        trim grid padding to the true (num_users, num_items) shape, and
+        attach the seen-item exclusion table from the problem's observed
+        entries."""
+
+        p = self.problem
+        return build_index(
+            self.state.U, self.state.W, p.spec,
+            num_users=p.num_users or None, num_items=p.num_items or None,
+            seen_coo=p.seen_coo,
+        )
+
+    def to_service(self, batch: int = 256, k: int = 10,
+                   exclude_seen: bool = True) -> RecommendService:
+        """Fixed-batch top-k serving front end over the trained factors."""
+
+        return RecommendService(self.to_recommend_index(), batch=batch, k=k,
+                                exclude_seen=exclude_seen)
+
+
+class Trainer:
+    """Runs any ``Schedule`` against any ``CompletionProblem``.
+
+    ``cfg`` carries the paper's hyper-parameters (ρ, λ, step-size a/b);
+    ``None`` uses the paper defaults sized to the problem's grid.
+    ``callbacks`` fire at fit start, every eval boundary, and fit end.
+    """
+
+    def __init__(self, cfg: GossipMCConfig | None = None,
+                 callbacks: Sequence[Callback] = ()):
+        self.cfg = cfg
+        self.callbacks = list(callbacks)
+
+    def _config_for(self, problem: CompletionProblem) -> GossipMCConfig:
+        if self.cfg is not None:
+            return self.cfg
+        spec = problem.spec
+        return GossipMCConfig(m=spec.m, n=spec.n, p=spec.p, q=spec.q,
+                              rank=spec.r)
+
+    def fit(
+        self,
+        problem: CompletionProblem,
+        schedule: Union[str, Schedule] = "wave",
+        *,
+        seed: int = 0,
+        key: jax.Array | None = None,
+        state: State | None = None,
+        resume_from: Union[Checkpoint, CheckpointManager, str, None] = None,
+        **schedule_overrides,
+    ) -> FitResult:
+        """Run the schedule to completion and return a :class:`FitResult`.
+
+        ``schedule`` is a ``Schedule`` instance or a name ("sequential",
+        "wave", "full", "gossip"); keyword overrides (e.g.
+        ``num_rounds=500``) are applied either way.  ``resume_from``
+        restarts from the latest session checkpoint written by the
+        :class:`Checkpoint` callback (state + PRNG key + progress unit),
+        replaying the exact stream of the uninterrupted run."""
+
+        if not isinstance(problem, CompletionProblem):
+            raise TypeError(
+                f"Trainer.fit expects a CompletionProblem, got "
+                f"{type(problem).__name__}; build one with "
+                "CompletionProblem.from_dense/from_entries/from_dataset"
+            )
+        sched = make_schedule(schedule, **schedule_overrides)
+        cfg = self._config_for(problem)
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+
+        done = 0
+        if resume_from is not None:
+            mgr = resume_from
+            if isinstance(mgr, Checkpoint):
+                mgr = mgr.manager
+            if isinstance(mgr, str):
+                mgr = CheckpointManager(mgr)
+            restored = restore_session(mgr, problem)
+            if restored is not None:
+                done, state, key = restored
+
+        for cb in self.callbacks:
+            cb.on_fit_start(problem, sched, cfg)
+
+        def eval_cb(unit, cost, st, k):
+            for cb in self.callbacks:
+                cb.on_eval(unit, cost, st, k)
+
+        t0 = time.perf_counter()
+        state, history = sched.run(
+            problem, cfg, key, state=state, done=done,
+            eval_cb=eval_cb if self.callbacks else None,
+        )
+        result = FitResult(
+            state=state, history=history,
+            wall_time=time.perf_counter() - t0,
+            schedule=sched.name, problem=problem,
+        )
+        for cb in self.callbacks:
+            cb.on_fit_end(result)
+        return result

@@ -85,7 +85,7 @@ def init_encdec(key, cfg: ModelConfig, ctx: Ctx) -> dict:
         "dec_ln": _init_ln(cfg.d_model, dtype),
         "tok_embed": L.init_embedding(kt, cfg.vocab_size, cfg.d_model, dtype),
         # learned decoder positions; sized for the assigned 32k decode cells
-        # (the real model stops at 448 — DESIGN.md §9)
+        # (the real model stops at 448 — DESIGN.md §10)
         "dec_pos": (jax.random.normal(kp, (_MAX_POS, cfg.d_model)) * 0.01
                     ).astype(dtype),
     }

@@ -40,22 +40,41 @@ class RecommendIndex(NamedTuple):
     seen: jax.Array   # (m, S) int32 — items to exclude; pad value == n
 
 
+def build_seen_table_coo(rows: np.ndarray, cols: np.ndarray,
+                         num_users: int, num_items: int) -> np.ndarray:
+    """Padded per-user seen-item lists straight from COO (user, item) pairs
+    — the streaming-ingestion path; never materializes an (m, n) mask.
+    Pairs must be sorted by user (np.nonzero order qualifies).  Pad value is
+    ``num_items`` (out of range → dropped by the serve-time scatter)."""
+
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    if len(rows) and np.any(np.diff(rows) < 0):
+        raise ValueError(
+            "build_seen_table_coo needs user-sorted pairs; sort with "
+            "order = np.argsort(rows, kind='stable') first"
+        )
+    keep = cols < num_items                       # drop grid-padding columns
+    rows, cols = rows[keep], cols[keep]
+    counts = np.bincount(rows, minlength=num_users)
+    S = int(counts.max()) if len(rows) else 0
+    S = max(_SEEN_PAD_QUANTUM,
+            (S + _SEEN_PAD_QUANTUM - 1) // _SEEN_PAD_QUANTUM * _SEEN_PAD_QUANTUM)
+    seen = np.full((num_users, S), num_items, np.int32)
+    # user-sorted pairs: entries of user u occupy the contiguous range
+    # [starts[u], starts[u]+counts[u])
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    seen[rows, np.arange(len(rows)) - starts[rows]] = cols
+    return seen
+
+
 def build_seen_table(train_mask: np.ndarray, num_items: int) -> np.ndarray:
     """Padded per-user seen-item lists from a 0/1 mask.  Pad value is
     ``num_items`` (out of range → dropped by the serve-time scatter)."""
 
-    m = train_mask.shape[0]
-    rows, cols = np.nonzero(np.asarray(train_mask)[:, :num_items])
-    counts = np.bincount(rows, minlength=m)
-    S = int(counts.max()) if len(rows) else 0
-    S = max(_SEEN_PAD_QUANTUM,
-            (S + _SEEN_PAD_QUANTUM - 1) // _SEEN_PAD_QUANTUM * _SEEN_PAD_QUANTUM)
-    seen = np.full((m, S), num_items, np.int32)
-    # np.nonzero yields row-major order, so entries of user u occupy the
-    # contiguous range [starts[u], starts[u]+counts[u])
-    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    seen[rows, np.arange(len(rows)) - starts[rows]] = cols
-    return seen
+    mask = np.asarray(train_mask)
+    rows, cols = np.nonzero(mask[:, :num_items])  # row-major == user-sorted
+    return build_seen_table_coo(rows, cols, mask.shape[0], num_items)
 
 
 def build_index(
@@ -65,11 +84,14 @@ def build_index(
     train_mask: np.ndarray | None = None,
     num_users: int | None = None,
     num_items: int | None = None,
+    seen_coo: tuple[np.ndarray, np.ndarray] | None = None,
 ) -> RecommendIndex:
     """Assemble block factors and attach the seen-item exclusion table.
 
     ``num_users``/``num_items`` trim grid padding (pad_to_grid rows/cols)
-    back to the true matrix shape.
+    back to the true matrix shape.  The exclusion table comes from a 0/1
+    ``train_mask`` or — mask-free, for COO-ingested problems — from
+    user-sorted ``seen_coo = (user_ids, item_ids)`` pairs.
     """
 
     u, w = assemble(U, W, spec)
@@ -79,6 +101,8 @@ def build_index(
     w = jnp.asarray(w[:n], jnp.float32)
     if train_mask is not None:
         seen = build_seen_table(np.asarray(train_mask)[:m], n)
+    elif seen_coo is not None:
+        seen = build_seen_table_coo(seen_coo[0], seen_coo[1], m, n)
     else:
         seen = np.full((m, _SEEN_PAD_QUANTUM), n, np.int32)
     return RecommendIndex(u, w, jnp.asarray(seen))

@@ -1,3 +1,4 @@
+from repro.sparse.entries import BlockEntries
 from repro.sparse.store import (
     DEFAULT_BUCKET,
     MinibatchStream,
@@ -7,6 +8,7 @@ from repro.sparse.store import (
     ensure_layout,
     from_blocks,
     from_dataset,
+    from_entries,
     minibatch_grad_scale,
     sample_minibatch,
     to_dense,
@@ -20,6 +22,7 @@ from repro.sparse.objective import (
 )
 
 __all__ = [
+    "BlockEntries",
     "DEFAULT_BUCKET",
     "MinibatchStream",
     "SparseProblem",
@@ -28,6 +31,7 @@ __all__ = [
     "ensure_layout",
     "from_blocks",
     "from_dataset",
+    "from_entries",
     "minibatch_grad_scale",
     "sample_minibatch",
     "to_dense",

@@ -1,0 +1,95 @@
+"""``BlockEntries`` — the one pytree that carries a block's sparse entries.
+
+PR 2 left the sparse gradient surface exploded: every consumer threaded
+``(rows, cols, vals, valid, col_perm, row_ptr, col_ptr)`` positionally, so
+adding one field (the CSR/CSC aux arrays did exactly this) touched every
+scheduler, every vmap lambda and every kernel wrapper.  This module is the
+fix: a single NamedTuple pytree accepted by ``sparse/objective.py``,
+``kernels/sddmm/*`` and ``core/{sequential,waves,gossip}.py``.  Adding a
+field now means editing this class and the code that actually uses the
+field — never the schedulers.
+
+Layout contract (see ``sparse/store.py`` for the full story):
+
+    rows     : (..., E) int32   — intra-block row index per entry
+    cols     : (..., E) int32   — intra-block col index
+    vals     : (..., E) float32 — observed value
+    valid    : (..., E) float32 — 1 real entry, 0 padding
+    col_perm : (..., E) int32   — gather to column-sorted (CSC) order
+    row_ptr  : (..., mb+1) int32 — CSR segment offsets over the entry axis
+    col_ptr  : (..., nb+1) int32 — CSC segment offsets (in col_perm order)
+
+The three aux fields default to ``None`` (an empty pytree node, so vmap /
+tree_map / shard_map specs all compose): an unsorted COO bundle built with
+:meth:`from_coo` is a valid input for the order-agnostic ``scatter``
+gradient method, while the ``segment`` fast path requires
+:attr:`has_sorted_aux`.
+
+Leading batch axes are free: the store stacks blocks as (p, q, ...), the
+schedulers gather structure trios as (3, ...), and ``jax.vmap`` peels axes
+off every leaf at once — that is the point of making this a pytree.
+
+This module is a dependency-free leaf (jax only) so every layer can import
+it without cycles.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+
+
+class BlockEntries(NamedTuple):
+    """Padded-COO entries of one block (or a stack of blocks)."""
+
+    rows: jax.Array
+    cols: jax.Array
+    vals: jax.Array
+    valid: jax.Array
+    col_perm: Optional[jax.Array] = None
+    row_ptr: Optional[jax.Array] = None
+    col_ptr: Optional[jax.Array] = None
+
+    @property
+    def capacity(self) -> int:
+        """Per-block entry capacity E (padding included)."""
+
+        return self.rows.shape[-1]
+
+    @property
+    def has_sorted_aux(self) -> bool:
+        """True when the CSR/CSC dual-view offsets are attached — the
+        precondition of the ``segment`` gradient method."""
+
+        return (
+            self.col_perm is not None
+            and self.row_ptr is not None
+            and self.col_ptr is not None
+        )
+
+    @property
+    def mb(self) -> int:
+        """Block row count, from the CSR offsets (sorted stores only)."""
+
+        return self.row_ptr.shape[-1] - 1
+
+    @property
+    def nb(self) -> int:
+        """Block col count, from the CSC offsets (sorted stores only)."""
+
+        return self.col_ptr.shape[-1] - 1
+
+    @classmethod
+    def from_coo(cls, rows, cols, vals, valid) -> "BlockEntries":
+        """Order-agnostic bundle (no sorted aux) — scatter-method input."""
+
+        return cls(rows, cols, vals, valid)
+
+    def gather(self, *idx) -> "BlockEntries":
+        """Index every field identically: ``entries.gather(bi, bj)`` pulls
+        the same (possibly advanced-indexed) blocks out of all leaves, e.g.
+        a structure's three blocks as (3, ...) stacks.  ``None`` aux fields
+        pass through untouched."""
+
+        return jax.tree.map(lambda f: f[idx], self)

@@ -7,12 +7,20 @@ while the consensus and regularization terms — which only touch the factors
 — are unchanged.  Gradients agree with the dense masked path to float
 rounding; tests pin the equivalence at 1e-5.
 
+Every per-block function takes a single ``BlockEntries`` bundle
+(``sparse/entries.py``) instead of exploded positional aux arrays — the
+whole sparse call surface routes through one pytree, so adding a store
+field never again touches the schedulers (the old 9-positional shape is
+kept as a deprecated shim on :func:`f_grads_sparse`).
+
 The default gradient ``method="segment"`` streams contiguous segment
 reductions over the store's CSR view (gU) and CSC dual view (gW) — see
 ``kernels/sddmm/segment.py``; ``method="scatter"`` is the order-agnostic
 scatter-add reference kept for A/B validation and as the path for stores of
 unknown order.  ``use_kernel`` swaps in the Pallas implementation of the
-selected method.
+selected method; ``chunk`` tunes the segment-reduce chunk size (an engine
+option surfaced by ``repro.mc.EngineOptions`` and swept by
+``benchmarks/sparse_vs_dense.py``).
 
 This module depends only on the sddmm kernel package so both
 ``core.objective`` and ``core.waves`` can import it without cycles.
@@ -20,6 +28,7 @@ This module depends only on the sddmm kernel package so both
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
@@ -28,53 +37,70 @@ import jax.numpy as jnp
 from repro.kernels.sddmm import ops as sddmm_ops
 from repro.kernels.sddmm import ref as sddmm_ref
 from repro.kernels.sddmm import segment as sddmm_seg
+from repro.sparse.entries import BlockEntries
 from repro.sparse.store import SparseProblem
 
 
-def f_cost_sparse(rows, cols, vals, valid, u, w):
+def f_cost_sparse(entries: BlockEntries, u, w):
     """‖valid ⊙ (vals − ⟨U[rows], W[cols]⟩)‖² for one block."""
 
-    e = sddmm_ref.sddmm_residuals(rows, cols, vals, valid, u, w)
+    e = sddmm_ref.sddmm_residuals(entries, u, w)
     return jnp.sum(e * e)
 
 
-def f_grads_sparse(rows, cols, vals, valid, col_perm, row_ptr, col_ptr, u, w,
-                   use_kernel: bool = False, method: str = "segment"):
-    """(f, gU, gW) for one block from its entry list; closed form.
+def f_grads_sparse(entries, u, w, *legacy, use_kernel: bool = False,
+                   method: str = "segment", chunk: int | None = None):
+    """(f, gU, gW) for one block from its ``BlockEntries``; closed form.
 
     ``method="segment"`` (default) requires the row-sorted layout the store
-    guarantees and reduces contiguous CSR/CSC segments; ``"scatter"`` is the
-    order-agnostic scatter-add reference.  ``use_kernel`` selects the Pallas
-    implementation of the chosen method (the XLA paths double as fallbacks
-    for VMEM-oversized blocks)."""
+    guarantees (``entries.has_sorted_aux``) and reduces contiguous CSR/CSC
+    segments; ``"scatter"`` is the order-agnostic scatter-add reference.
+    ``use_kernel`` selects the Pallas implementation of the chosen method
+    (the XLA paths double as fallbacks for VMEM-oversized blocks);
+    ``chunk`` tunes the XLA segment-reduce chunk size.
 
+    The pre-BlockEntries positional shape
+    ``(rows, cols, vals, valid, col_perm, row_ptr, col_ptr, u, w)`` is
+    still accepted with a DeprecationWarning."""
+
+    if legacy:
+        if len(legacy) != 6:
+            raise TypeError(
+                "f_grads_sparse takes (entries, u, w) — or the deprecated "
+                "9-positional (rows, cols, vals, valid, col_perm, row_ptr, "
+                f"col_ptr, u, w) shape; got {3 + len(legacy)} positional "
+                "arguments (use_kernel/method/chunk are keyword-only)"
+            )
+        warnings.warn(
+            "f_grads_sparse(rows, cols, vals, valid, col_perm, row_ptr, "
+            "col_ptr, u, w) is deprecated; pass a single BlockEntries: "
+            "f_grads_sparse(entries, u, w)",
+            DeprecationWarning, stacklevel=2,
+        )
+        entries = BlockEntries(entries, u, w, legacy[0], col_perm=legacy[1],
+                               row_ptr=legacy[2], col_ptr=legacy[3])
+        u, w = legacy[4], legacy[5]
     if method == "scatter":
         if use_kernel:
-            return sddmm_ops.sddmm_factor_grad(rows, cols, vals, valid, u, w)
-        return sddmm_ref.sddmm_factor_grad_ref(rows, cols, vals, valid, u, w)
+            return sddmm_ops.sddmm_factor_grad(entries, u, w)
+        return sddmm_ref.sddmm_factor_grad_ref(entries, u, w)
     if method != "segment":
         raise ValueError(f"unknown method {method!r}; 'segment' or 'scatter'")
     if use_kernel:
-        return sddmm_ops.sddmm_segment_grad(
-            rows, cols, vals, valid, col_perm, row_ptr, col_ptr, u, w
-        )
-    return sddmm_seg.sddmm_segment_grad_ref(
-        rows, cols, vals, valid, col_perm, row_ptr, col_ptr, u, w
-    )
+        return sddmm_ops.sddmm_segment_grad(entries, u, w, chunk=chunk)
+    return sddmm_seg.sddmm_segment_grad_ref(entries, u, w, chunk=chunk)
 
 
 def total_report_cost_sparse(sp: SparseProblem, U, W, lam: float):
     """Paper Table-2 cost Σ f_ij + λ‖U_ij‖² + λ‖W_ij‖², nnz-proportional."""
 
-    def per_block(rows, cols, vals, valid, u, w):
+    def per_block(entries, u, w):
         return (
-            f_cost_sparse(rows, cols, vals, valid, u, w)
+            f_cost_sparse(entries, u, w)
             + lam * jnp.sum(u * u) + lam * jnp.sum(w * w)
         )
 
-    per = jax.vmap(jax.vmap(per_block))(
-        sp.rows, sp.cols, sp.vals, sp.valid, U, W
-    )
+    per = jax.vmap(jax.vmap(per_block))(sp.entries, U, W)
     return jnp.sum(per)
 
 
@@ -93,21 +119,20 @@ def consensus_pulls(A: jax.Array, axis: int) -> jax.Array:
     return fwd + bwd
 
 
-@partial(jax.jit, static_argnames=("rho", "lam", "use_kernel", "method"))
+@partial(jax.jit, static_argnames=("rho", "lam", "use_kernel", "method",
+                                   "chunk"))
 def full_gradients_sparse(
     sp: SparseProblem, U: jax.Array, W: jax.Array, *,
     rho: float, lam: float, use_kernel: bool = False, method: str = "segment",
+    chunk: int | None = None,
 ):
     """∇L of the collapsed objective, f-part from the sparse store."""
 
     _, gu_f, gw_f = jax.vmap(jax.vmap(
-        lambda rows, cols, vals, valid, cperm, rptr, cptr, u, w:
-        f_grads_sparse(
-            rows, cols, vals, valid, cperm, rptr, cptr, u, w,
-            use_kernel=use_kernel, method=method,
+        lambda entries, u, w: f_grads_sparse(
+            entries, u, w, use_kernel=use_kernel, method=method, chunk=chunk,
         )
-    ))(sp.rows, sp.cols, sp.vals, sp.valid,
-       sp.col_perm, sp.row_ptr, sp.col_ptr, U, W)
+    ))(sp.entries, U, W)
     gU = gu_f + 2.0 * lam * U + 2.0 * rho * consensus_pulls(U, axis=1)
     gW = gw_f + 2.0 * lam * W + 2.0 * rho * consensus_pulls(W, axis=0)
     return gU, gW

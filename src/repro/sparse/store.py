@@ -3,16 +3,17 @@
 The dense path materializes (p, q, mb, nb) value/mask tensors, so every
 objective/gradient evaluation costs O(m·n) regardless of how sparse the
 ratings are.  MovieLens/Netflix-style workloads are ≤5% dense; this store
-keeps, per grid block, only the observed entries:
+keeps, per grid block, only the observed entries, bundled as a single
+``BlockEntries`` pytree (sparse/entries.py) stacked over the (p, q) grid:
 
-    rows     : (p, q, E)    int32   — intra-block row index of each entry
-    cols     : (p, q, E)    int32   — intra-block col index
-    vals     : (p, q, E)    float32 — observed value
-    valid    : (p, q, E)    float32 — 1 for real entries, 0 for padding
-    nnz      : (p, q)       int32   — real entry count per block
-    col_perm : (p, q, E)    int32   — permutation to column-sorted order
-    row_ptr  : (p, q, mb+1) int32   — CSR segment offsets over the entry axis
-    col_ptr  : (p, q, nb+1) int32   — CSC segment offsets (in col_perm order)
+    entries.rows     : (p, q, E)    int32   — intra-block row index
+    entries.cols     : (p, q, E)    int32   — intra-block col index
+    entries.vals     : (p, q, E)    float32 — observed value
+    entries.valid    : (p, q, E)    float32 — 1 real, 0 padding
+    entries.col_perm : (p, q, E)    int32   — permutation to col-sorted order
+    entries.row_ptr  : (p, q, mb+1) int32   — CSR segment offsets
+    entries.col_ptr  : (p, q, nb+1) int32   — CSC segment offsets
+    nnz              : (p, q)       int32   — real entry count per block
 
 Entries are **segment-sorted** (DESIGN.md §3): real entries come first, in
 (row, col) lexicographic order, so each block row is a contiguous segment
@@ -28,7 +29,9 @@ any sum.
 *bucket* multiple, so recompilation only triggers when occupancy crosses a
 bucket boundary, never per-matrix.  The leading (p, q) axes shard exactly
 like the dense tensors (P(row_axes, col_axes)), so the distributed gossip
-step reuses its halo protocol unchanged.
+step reuses its halo protocol unchanged.  ``SparseProblem.pspec`` is the
+one place that knows the pytree structure for shard_map specs — adding a
+field updates this module, never the schedulers.
 """
 
 from __future__ import annotations
@@ -41,38 +44,76 @@ import numpy as np
 
 from repro.core import grid as G
 from repro.data.synthetic import MCDataset
+from repro.sparse.entries import BlockEntries
 
 DEFAULT_BUCKET = 256
 
 
 class SparseProblem(NamedTuple):
     """Blockified matrix-completion problem, observed entries only,
-    segment-sorted by row with a precomputed column-sorted dual view."""
+    segment-sorted by row with a precomputed column-sorted dual view.
 
-    rows: jax.Array       # (p, q, E) int32
-    cols: jax.Array       # (p, q, E) int32
-    vals: jax.Array       # (p, q, E) float32
-    valid: jax.Array      # (p, q, E) float32
-    nnz: jax.Array        # (p, q) int32
-    col_perm: jax.Array   # (p, q, E) int32
-    row_ptr: jax.Array    # (p, q, mb+1) int32
-    col_ptr: jax.Array    # (p, q, nb+1) int32
+    Two fields: the grid-stacked ``BlockEntries`` pytree plus the per-block
+    ``nnz`` counts.  The flat per-field accessors (``sp.rows`` etc.) are
+    kept as read-only properties for interop."""
+
+    entries: BlockEntries  # every field stacked over the leading (p, q)
+    nnz: jax.Array         # (p, q) int32
+
+    # -- flat accessors (legacy surface; new code should use .entries) ----
+    @property
+    def rows(self) -> jax.Array:
+        return self.entries.rows
+
+    @property
+    def cols(self) -> jax.Array:
+        return self.entries.cols
+
+    @property
+    def vals(self) -> jax.Array:
+        return self.entries.vals
+
+    @property
+    def valid(self) -> jax.Array:
+        return self.entries.valid
+
+    @property
+    def col_perm(self) -> jax.Array:
+        return self.entries.col_perm
+
+    @property
+    def row_ptr(self) -> jax.Array:
+        return self.entries.row_ptr
+
+    @property
+    def col_ptr(self) -> jax.Array:
+        return self.entries.col_ptr
 
     @property
     def capacity(self) -> int:
-        return self.rows.shape[-1]
+        return self.entries.capacity
 
     @property
     def mb(self) -> int:
         """Block row count (from the CSR offsets — the true shape source)."""
 
-        return self.row_ptr.shape[-1] - 1
+        return self.entries.mb
 
     @property
     def nb(self) -> int:
         """Block col count (from the CSC offsets)."""
 
-        return self.col_ptr.shape[-1] - 1
+        return self.entries.nb
+
+    @classmethod
+    def pspec(cls, spec2) -> "SparseProblem":
+        """Matching pytree of PartitionSpecs: every leaf shards on its
+        leading (p, q) axes.  The single source of truth for shard_map
+        in_specs — schedulers call this instead of spelling out fields."""
+
+        return cls(
+            BlockEntries(*([spec2] * len(BlockEntries._fields))), spec2
+        )
 
 
 def bucketed_capacity(max_nnz: int, bucket: int = DEFAULT_BUCKET) -> int:
@@ -81,6 +122,57 @@ def bucketed_capacity(max_nnz: int, bucket: int = DEFAULT_BUCKET) -> int:
     if bucket <= 0:
         raise ValueError(f"bucket must be positive, got {bucket}")
     return max(bucket, (max_nnz + bucket - 1) // bucket * bucket)
+
+
+def _pack_sorted(blk, rr, cc, vv, p, q, mb, nb, bucket) -> SparseProblem:
+    """Shared packing tail: (block, row, col)-lexicographically sorted entry
+    streams -> the padded, segment-sorted store.  ``blk`` must be
+    non-decreasing with (rr, cc) lexicographic within each block."""
+
+    total = len(blk)
+    nnz = np.bincount(blk, minlength=p * q).astype(np.int64)
+    E = bucketed_capacity(int(nnz.max()) if total else 0, bucket)
+    starts = np.zeros(p * q + 1, np.int64)
+    np.cumsum(nnz, out=starts[1:])
+    within = np.arange(total, dtype=np.int64) - starts[blk]
+    dest = blk * E + within
+
+    # padding rows sit at mb-1 so each block's row stream is non-decreasing
+    # over the full capacity — the segment engine's sorted-gather contract
+    rows = np.full(p * q * E, mb - 1, np.int32)
+    cols = np.zeros(p * q * E, np.int32)
+    vals = np.zeros(p * q * E, np.float32)
+    valid = np.zeros(p * q * E, np.float32)
+    rows[dest] = rr
+    cols[dest] = cc
+    vals[dest] = vv
+    valid[dest] = 1.0
+
+    # CSR offsets: per-(block, row) counts, cumulated along the row axis.
+    rcnt = np.bincount(blk * mb + rr, minlength=p * q * mb).reshape(p * q, mb)
+    row_ptr = np.zeros((p * q, mb + 1), np.int32)
+    row_ptr[:, 1:] = np.cumsum(rcnt, axis=1)
+
+    # CSC dual view: stable (block, col, row) order.  lexsort keeps the
+    # block grouping (blk is already sorted and is the primary key), so the
+    # i-th col-sorted entry of block b sits at global position starts[b]+i.
+    order = np.lexsort((rr, cc, blk))
+    col_perm = np.tile(np.arange(E, dtype=np.int32), p * q)  # padding -> itself
+    col_perm[blk * E + within] = within[order].astype(np.int32)
+    ccnt = np.bincount(blk * nb + cc, minlength=p * q * nb).reshape(p * q, nb)
+    col_ptr = np.zeros((p * q, nb + 1), np.int32)
+    col_ptr[:, 1:] = np.cumsum(ccnt, axis=1)
+
+    entries = BlockEntries(
+        jnp.asarray(rows.reshape(p, q, E)),
+        jnp.asarray(cols.reshape(p, q, E)),
+        jnp.asarray(vals.reshape(p, q, E)),
+        jnp.asarray(valid.reshape(p, q, E)),
+        jnp.asarray(col_perm.reshape(p, q, E)),
+        jnp.asarray(row_ptr.reshape(p, q, mb + 1)),
+        jnp.asarray(col_ptr.reshape(p, q, nb + 1)),
+    )
+    return SparseProblem(entries, jnp.asarray(nnz.reshape(p, q).astype(np.int32)))
 
 
 def from_blocks(
@@ -100,50 +192,49 @@ def from_blocks(
     p, q, mb, nb = xb.shape
     bi, bj, rr, cc = np.nonzero(maskb)            # C order: row-sorted per block
     blk = bi * q + bj                             # non-decreasing
-    total = len(blk)
-    nnz = np.bincount(blk, minlength=p * q).astype(np.int64)
-    E = bucketed_capacity(int(nnz.max()) if total else 0, bucket)
-    starts = np.zeros(p * q + 1, np.int64)
-    np.cumsum(nnz, out=starts[1:])
-    within = np.arange(total, dtype=np.int64) - starts[blk]
-    dest = blk * E + within
+    return _pack_sorted(blk, rr, cc, xb[bi, bj, rr, cc], p, q, mb, nb, bucket)
 
-    # padding rows sit at mb-1 so each block's row stream is non-decreasing
-    # over the full capacity — the segment engine's sorted-gather contract
-    rows = np.full(p * q * E, mb - 1, np.int32)
-    cols = np.zeros(p * q * E, np.int32)
-    vals = np.zeros(p * q * E, np.float32)
-    valid = np.zeros(p * q * E, np.float32)
-    rows[dest] = rr
-    cols[dest] = cc
-    vals[dest] = xb[bi, bj, rr, cc]
-    valid[dest] = 1.0
 
-    # CSR offsets: per-(block, row) counts, cumulated along the row axis.
-    rcnt = np.bincount(blk * mb + rr, minlength=p * q * mb).reshape(p * q, mb)
-    row_ptr = np.zeros((p * q, mb + 1), np.int32)
-    row_ptr[:, 1:] = np.cumsum(rcnt, axis=1)
+def from_entries(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    m: int,
+    n: int,
+    p: int,
+    q: int,
+    bucket: int = DEFAULT_BUCKET,
+) -> tuple[SparseProblem, tuple[int, int]]:
+    """Build the sorted store straight from a global COO triplet list —
+    no dense (m, n) materialization anywhere, the streaming-ingestion entry
+    point.  The grid is padded implicitly (mb = ceil(m/p) etc.); returns
+    the store plus the padded (m, n) so callers can build a ``GridSpec``.
+    Duplicate (row, col) pairs are the caller's responsibility."""
 
-    # CSC dual view: stable (block, col, row) order.  lexsort keeps the
-    # block grouping (blk is already sorted and is the primary key), so the
-    # i-th col-sorted entry of block b sits at global position starts[b]+i.
-    order = np.lexsort((rr, cc, blk))
-    col_perm = np.tile(np.arange(E, dtype=np.int32), p * q)  # padding -> itself
-    col_perm[blk * E + within] = within[order].astype(np.int32)
-    ccnt = np.bincount(blk * nb + cc, minlength=p * q * nb).reshape(p * q, nb)
-    col_ptr = np.zeros((p * q, nb + 1), np.int32)
-    col_ptr[:, 1:] = np.cumsum(ccnt, axis=1)
-
-    return SparseProblem(
-        jnp.asarray(rows.reshape(p, q, E)),
-        jnp.asarray(cols.reshape(p, q, E)),
-        jnp.asarray(vals.reshape(p, q, E)),
-        jnp.asarray(valid.reshape(p, q, E)),
-        jnp.asarray(nnz.reshape(p, q).astype(np.int32)),
-        jnp.asarray(col_perm.reshape(p, q, E)),
-        jnp.asarray(row_ptr.reshape(p, q, mb + 1)),
-        jnp.asarray(col_ptr.reshape(p, q, nb + 1)),
-    )
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals, np.float32)
+    if not (rows.shape == cols.shape == vals.shape) or rows.ndim != 1:
+        raise ValueError(
+            f"rows/cols/vals must be equal-length 1-D arrays, got "
+            f"{rows.shape}/{cols.shape}/{vals.shape}"
+        )
+    if len(rows) and (rows.min() < 0 or rows.max() >= m
+                      or cols.min() < 0 or cols.max() >= n):
+        raise ValueError(
+            f"entry indices out of range for a {m}x{n} matrix: rows in "
+            f"[{rows.min()}, {rows.max()}], cols in [{cols.min()}, {cols.max()}]"
+        )
+    mb = -(-m // p)
+    nb = -(-n // q)
+    bi, rr = rows // mb, rows % mb
+    bj, cc = cols // nb, cols % nb
+    blk = bi * q + bj
+    order = np.lexsort((cc, rr, blk))              # (block, row, col) lexicographic
+    sp = _pack_sorted(blk[order], rr[order].astype(np.int64),
+                      cc[order].astype(np.int64), vals[order],
+                      p, q, mb, nb, bucket)
+    return sp, (mb * p, nb * q)
 
 
 def from_dataset(
@@ -273,10 +364,13 @@ def sample_minibatch(key: jax.Array, sp: SparseProblem, batch: int) -> SparsePro
         sp.nnz.reshape(p * q),
     )
     shape = (p, q, batch)
-    return SparseProblem(
+    entries = BlockEntries(
         rows.reshape(shape), cols.reshape(shape), vals.reshape(shape),
-        valid.reshape(shape), jnp.where(sp.nnz > 0, batch, 0).astype(jnp.int32),
-        perm.reshape(shape), rptr.reshape(p, q, mb + 1), cptr.reshape(p, q, nb + 1),
+        valid.reshape(shape), perm.reshape(shape),
+        rptr.reshape(p, q, mb + 1), cptr.reshape(p, q, nb + 1),
+    )
+    return SparseProblem(
+        entries, jnp.where(sp.nnz > 0, batch, 0).astype(jnp.int32)
     )
 
 

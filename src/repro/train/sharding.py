@@ -1,6 +1,6 @@
 """Sharding rules: param/cache/batch PartitionSpecs for every family.
 
-Policy (MaxText-style 2-D sharding, DESIGN.md §4):
+Policy (MaxText-style 2-D sharding, DESIGN.md §5):
 
 * **TP** over the ``model`` axis: attention heads / flat projection widths,
   FFN hidden, vocab, MoE experts, Mamba heads.

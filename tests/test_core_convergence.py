@@ -22,7 +22,7 @@ def small_problem():
 
 def test_sequential_cost_decreases(small_problem):
     cfg, spec, ds, prob = small_problem
-    _, hist = sequential.fit(prob, spec, cfg, jax.random.PRNGKey(0),
+    _, hist = sequential._fit(prob, spec, cfg, jax.random.PRNGKey(0),
                              num_iters=20000, eval_every=5000)
     costs = [c for _, c in hist]
     assert costs[-1] < costs[0] * 1e-2
@@ -30,9 +30,9 @@ def test_sequential_cost_decreases(small_problem):
 
 def test_wave_matches_sequential_floor(small_problem):
     cfg, spec, ds, prob = small_problem
-    _, hist_w = waves.fit(prob, spec, cfg, jax.random.PRNGKey(0),
+    _, hist_w = waves._fit(prob, spec, cfg, jax.random.PRNGKey(0),
                           num_rounds=600, eval_every=600, mode="wave")
-    _, hist_s = sequential.fit(prob, spec, cfg, jax.random.PRNGKey(0),
+    _, hist_s = sequential._fit(prob, spec, cfg, jax.random.PRNGKey(0),
                                num_iters=hist_w[-1][0], eval_every=hist_w[-1][0])
     # same t-budget -> same order of magnitude cost floor
     assert hist_w[-1][1] < 10 * max(hist_s[-1][1], 1e-8) or hist_w[-1][1] < 1.0
@@ -40,14 +40,14 @@ def test_wave_matches_sequential_floor(small_problem):
 
 def test_full_gd_converges(small_problem):
     cfg, spec, ds, prob = small_problem
-    _, hist = waves.fit(prob, spec, cfg, jax.random.PRNGKey(0),
+    _, hist = waves._fit(prob, spec, cfg, jax.random.PRNGKey(0),
                         num_rounds=2000, eval_every=2000, mode="full")
     assert hist[-1][1] < 1.0
 
 
 def test_consensus_and_rmse(small_problem):
     cfg, spec, ds, prob = small_problem
-    st, _ = waves.fit(prob, spec, cfg, jax.random.PRNGKey(0),
+    st, _ = waves._fit(prob, spec, cfg, jax.random.PRNGKey(0),
                       num_rounds=2500, eval_every=2500, mode="full")
     du, dw = assemble.consensus_error(st.U, st.W)
     assert du < 0.05 and dw < 0.05

@@ -95,6 +95,44 @@ def test_score_pairs():
     )
 
 
+@pytest.mark.parametrize("layout", ["dense", "sparse"])
+def test_fit_result_to_recommend_index_roundtrip(layout):
+    """Train through the facade, bridge into serving, and check the served
+    top-k against the numpy oracle computed from the assembled factors —
+    the full CompletionProblem -> Trainer -> FitResult -> serve round
+    trip."""
+
+    from repro.config import GossipMCConfig
+    from repro.data import lowrank_problem
+    from repro.mc import CompletionProblem, Trainer, Wave
+
+    m, n, p, q, r, k = 50, 37, 2, 2, 4, 5
+    ds = lowrank_problem(m, n, r, density=0.3, seed=1)
+    problem = CompletionProblem.from_dataset(ds, p, q, r, layout=layout)
+    cfg = GossipMCConfig(m=problem.spec.m, n=problem.spec.n, p=p, q=q, rank=r)
+    res = Trainer(cfg).fit(problem, Wave(num_rounds=5), seed=0)
+
+    index = res.to_recommend_index()
+    assert index.u.shape == (m, r) and index.w.shape == (n, r)
+    # the index factors ARE the assembled factors, grid padding trimmed
+    u, w = res.factors()
+    np.testing.assert_allclose(np.asarray(index.u), np.asarray(u)[:m],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(index.w), np.asarray(w)[:n],
+                               rtol=1e-6)
+
+    users = np.arange(m, dtype=np.int32)
+    items, scores = recommend_topk(index, jnp.asarray(users), k=k)
+    expect = _oracle_topk(np.asarray(index.u), np.asarray(index.w),
+                          np.asarray(ds.train_mask), users, k)
+    np.testing.assert_array_equal(np.asarray(items), expect)
+    # and the seen-item exclusion really came from the problem's entries
+    for bi, user in enumerate(users):
+        seen = set(np.nonzero(ds.train_mask[user])[0].tolist())
+        if n - len(seen) >= k:
+            assert not seen & set(np.asarray(items)[bi].tolist())
+
+
 def test_service_chunks_match_direct_call():
     index, _ = _index(m=70)
     svc = RecommendService(index, batch=16, k=6)

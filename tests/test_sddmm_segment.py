@@ -1,6 +1,7 @@
 """Segment-sorted SDDMM gradient engine: XLA segment-reduce and the Pallas
 sequential-scan kernel vs the order-agnostic scatter oracle (interpret mode
-on CPU), plus the raw segment_reduce primitive."""
+on CPU), plus the raw segment_reduce primitive.  All gradient entry points
+take a single BlockEntries bundle."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -13,6 +14,7 @@ from repro.kernels.sddmm import (
     sddmm_segment_grad_ref,
     segment_reduce,
 )
+from repro.sparse.entries import BlockEntries
 
 
 def _sorted_block(M, N, r, density, seed, bucket=64):
@@ -22,9 +24,7 @@ def _sorted_block(M, N, r, density, seed, bucket=64):
     sp = sparse.from_blocks(x, mask, bucket=bucket)
     u = rng.normal(size=(M, r)).astype(np.float32)
     w = rng.normal(size=(N, r)).astype(np.float32)
-    args = (sp.rows[0, 0], sp.cols[0, 0], sp.vals[0, 0], sp.valid[0, 0],
-            sp.col_perm[0, 0], sp.row_ptr[0, 0], sp.col_ptr[0, 0], u, w)
-    return args, u, w
+    return sp.entries.gather(0, 0), u, w
 
 
 @pytest.mark.parametrize("chunk", [4, 8, 32])
@@ -45,9 +45,9 @@ def test_segment_reduce_matches_numpy(chunk, E, S):
     (33, 257, 3, 0.3), (256, 100, 8, 0.02), (40, 24, 4, 1.0),
 ])
 def test_segment_ref_matches_scatter(M, N, r, density):
-    args, u, w = _sorted_block(M, N, r, density, seed=M + N + r)
-    l0, gu0, gw0 = sddmm_factor_grad_ref(*args[:4], u, w)
-    l1, gu1, gw1 = sddmm_segment_grad_ref(*args)
+    entries, u, w = _sorted_block(M, N, r, density, seed=M + N + r)
+    l0, gu0, gw0 = sddmm_factor_grad_ref(entries, u, w)
+    l1, gu1, gw1 = sddmm_segment_grad_ref(entries, u, w)
     scale = float(jnp.max(jnp.abs(gu0))) + 1e-6
     np.testing.assert_allclose(float(l1), float(l0), rtol=1e-5)
     np.testing.assert_allclose(np.asarray(gu1), np.asarray(gu0),
@@ -56,14 +56,28 @@ def test_segment_ref_matches_scatter(M, N, r, density):
                                rtol=1e-4, atol=1e-4 * scale)
 
 
+@pytest.mark.parametrize("chunk", [8, 64])
+def test_segment_ref_chunk_size_is_pure_performance(chunk):
+    """The engine-option chunk size never changes results beyond float
+    reassociation (the knob swept by sparse_vs_dense --chunks)."""
+
+    entries, u, w = _sorted_block(60, 90, 5, 0.2, seed=7)
+    base = sddmm_segment_grad_ref(entries, u, w)
+    got = sddmm_segment_grad_ref(entries, u, w, chunk=chunk)
+    scale = float(jnp.max(jnp.abs(base[1]))) + 1e-6
+    for a, b in zip(got, base):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4 * scale)
+
+
 @pytest.mark.parametrize("M,N,r,density", [
     (8, 8, 1, 0.5), (60, 90, 5, 0.1), (128, 128, 16, 0.05),
     (33, 257, 3, 0.3), (256, 100, 8, 0.02),
 ])
 def test_segment_kernel_matches_scatter(M, N, r, density):
-    args, u, w = _sorted_block(M, N, r, density, seed=2 * M + N + r)
-    l0, gu0, gw0 = sddmm_factor_grad_ref(*args[:4], u, w)
-    l2, gu2, gw2 = sddmm_segment_grad(*args)
+    entries, u, w = _sorted_block(M, N, r, density, seed=2 * M + N + r)
+    l0, gu0, gw0 = sddmm_factor_grad_ref(entries, u, w)
+    l2, gu2, gw2 = sddmm_segment_grad(entries, u, w)
     scale = float(jnp.max(jnp.abs(gu0))) + 1e-6
     np.testing.assert_allclose(float(l2), float(l0), rtol=1e-5)
     np.testing.assert_allclose(np.asarray(gu2), np.asarray(gu0),
@@ -78,10 +92,10 @@ def test_segment_kernel_full_capacity_boundary():
 
     M = N = 16
     r = 4
-    args, u, w = _sorted_block(M, N, r, density=1.0, seed=0, bucket=256)
-    assert int(args[5][-1]) == M * N == args[0].shape[0]  # row_ptr[-1] == E
-    l0, gu0, gw0 = sddmm_factor_grad_ref(*args[:4], u, w)
-    l2, gu2, gw2 = sddmm_segment_grad(*args)
+    entries, u, w = _sorted_block(M, N, r, density=1.0, seed=0, bucket=256)
+    assert int(entries.row_ptr[-1]) == M * N == entries.capacity
+    l0, gu0, gw0 = sddmm_factor_grad_ref(entries, u, w)
+    l2, gu2, gw2 = sddmm_segment_grad(entries, u, w)
     np.testing.assert_allclose(float(l2), float(l0), rtol=1e-5)
     np.testing.assert_allclose(np.asarray(gu2), np.asarray(gu0),
                                rtol=1e-4, atol=1e-3)
@@ -92,11 +106,14 @@ def test_segment_kernel_full_capacity_boundary():
 def test_segment_kernel_all_padding_is_zero():
     E, M, N, r = 128, 16, 16, 4
     z = np.zeros(E, np.float32)
-    loss, gu, gw = sddmm_segment_grad(
+    entries = BlockEntries(
         z.astype(np.int32), z.astype(np.int32), z, z,
-        np.arange(E, dtype=np.int32),
-        np.zeros(M + 1, np.int32), np.zeros(N + 1, np.int32),
-        np.ones((M, r), np.float32), np.ones((N, r), np.float32),
+        col_perm=np.arange(E, dtype=np.int32),
+        row_ptr=np.zeros(M + 1, np.int32),
+        col_ptr=np.zeros(N + 1, np.int32),
+    )
+    loss, gu, gw = sddmm_segment_grad(
+        entries, np.ones((M, r), np.float32), np.ones((N, r), np.float32)
     )
     assert float(loss) == 0.0
     assert float(np.abs(gu).max()) == 0.0

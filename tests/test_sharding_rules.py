@@ -40,7 +40,7 @@ def test_dense_layer_tp_fsdp():
 
 
 def test_vocab_tensors_model_only():
-    """embed/lm_head never take FSDP (batch-unsharding hazard, DESIGN.md §9)."""
+    """embed/lm_head never take FSDP (batch-unsharding hazard, DESIGN.md §10)."""
 
     for arch in ("internlm2-20b", "gemma2-2b"):
         cfg, shapes, specs = _specs_for(arch)

@@ -188,10 +188,27 @@ def test_segment_and_scatter_methods_agree_with_dense(use_kernel):
                                        rtol=1e-5, atol=1e-5 * scale)
     with pytest.raises(ValueError):
         sparse_obj.f_grads_sparse(
+            sp.entries.gather(0, 0), st.U[0, 0], st.W[0, 0], method="csr",
+        )
+
+
+def test_f_grads_sparse_legacy_positional_shape_warns():
+    """The pre-BlockEntries 9-positional signature still works but warns."""
+
+    from repro.sparse import objective as sparse_obj
+
+    spec, cfg, prob, sp = _problem(m=48, n=36, p=3, q=2, density=0.15, seed=4)
+    st = init_state(jax.random.PRNGKey(21), spec)
+    want = sparse_obj.f_grads_sparse(sp.entries.gather(0, 0),
+                                     st.U[0, 0], st.W[0, 0])
+    with pytest.warns(DeprecationWarning):
+        got = sparse_obj.f_grads_sparse(
             sp.rows[0, 0], sp.cols[0, 0], sp.vals[0, 0], sp.valid[0, 0],
             sp.col_perm[0, 0], sp.row_ptr[0, 0], sp.col_ptr[0, 0],
-            st.U[0, 0], st.W[0, 0], method="csr",
+            st.U[0, 0], st.W[0, 0],
         )
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
 
 def test_sequential_step_matches_dense():
@@ -213,8 +230,9 @@ def test_sequential_step_matches_dense():
 def test_wave_fit_sparse_layout_matches_dense():
     spec, cfg, prob, sp = _problem()
     key = jax.random.PRNGKey(0)
-    st_d, hist_d = waves.fit(prob, spec, cfg, key, num_rounds=3)
-    st_s, hist_s = waves.fit(prob, spec, cfg, key, num_rounds=3, layout="sparse")
+    st_d, hist_d = waves._fit(prob, spec, cfg, key, num_rounds=3)
+    st_s, hist_s = waves._fit(prob, spec, cfg, key, num_rounds=3,
+                              layout="sparse")
     np.testing.assert_allclose(np.asarray(st_s.U), np.asarray(st_d.U),
                                rtol=1e-5, atol=1e-5)
     assert hist_s[-1][0] == hist_d[-1][0]
@@ -259,8 +277,9 @@ def test_sddmm_kernel_matches_ref(M, N, r, density):
     u = rng.normal(size=(M, r)).astype(np.float32)
     w = rng.normal(size=(N, r)).astype(np.float32)
 
-    l1, gu1, gw1 = sddmm_factor_grad_ref(rows, cols, vals, valid, u, w)
-    l2, gu2, gw2 = sddmm_factor_grad(rows, cols, vals, valid, u, w)
+    entries = sparse.BlockEntries.from_coo(rows, cols, vals, valid)
+    l1, gu1, gw1 = sddmm_factor_grad_ref(entries, u, w)
+    l2, gu2, gw2 = sddmm_factor_grad(entries, u, w)
     np.testing.assert_allclose(float(l2), float(l1), rtol=1e-5)
     np.testing.assert_allclose(np.asarray(gu2), np.asarray(gu1),
                                rtol=1e-4, atol=1e-4)
@@ -274,7 +293,8 @@ def test_sddmm_all_padding_is_zero():
     u = np.ones((M, r), np.float32)
     w = np.ones((N, r), np.float32)
     loss, gu, gw = sddmm_factor_grad(
-        z.astype(np.int32), z.astype(np.int32), z, z, u, w
+        sparse.BlockEntries.from_coo(z.astype(np.int32), z.astype(np.int32),
+                                     z, z), u, w
     )
     assert float(loss) == 0.0
     assert float(np.abs(gu).max()) == 0.0
@@ -330,7 +350,7 @@ def test_minibatch_stream_batch_at_identical_across_instances():
     s2 = sparse.MinibatchStream(sp, batch=24, seed=11)
     for step in (0, 3, 1000):
         a, b = s1.batch_at(step), s2.batch_at(step)
-        for fa, fb in zip(a, b):
+        for fa, fb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
             np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
     other = sparse.MinibatchStream(sp, batch=24, seed=12).batch_at(3)
     assert not np.array_equal(np.asarray(other.rows),

@@ -1,0 +1,101 @@
+"""Execute every ```python fenced block in the given markdown files.
+
+The CI ``docs-smoke`` job runs this over ``docs/*.md`` and ``README.md``
+so documentation can never silently rot: every snippet is an executable
+contract, run top-to-bottom in one shared namespace *per file* (so a
+tutorial can build state across blocks, exactly as a reader would).
+
+A block can opt out by placing ``<!-- docs-smoke: skip -->`` on the line
+directly above its opening fence (for illustrative pseudo-code); bash and
+other non-python fences are ignored.  Any exception fails the run with
+the originating ``file:line`` so the broken snippet is one click away.
+
+    PYTHONPATH=src python scripts/run_doc_snippets.py [FILE ...]
+    PYTHONPATH=src python scripts/run_doc_snippets.py          # default set
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import sys
+import time
+import traceback
+
+SKIP_MARK = "<!-- docs-smoke: skip -->"
+DEFAULT = sorted(glob.glob("docs/*.md")) + ["README.md"]
+
+
+def extract_blocks(path: str) -> list[tuple[int, str, bool]]:
+    """(first_code_line, code, skipped) for every ```python fence."""
+
+    blocks = []
+    lines = open(path).read().splitlines()
+    cur: list[str] | None = None
+    start = 0
+    skip_next = False
+    skipped = False
+    for i, line in enumerate(lines, 1):
+        s = line.strip()
+        if cur is None:
+            if s.startswith("```python"):
+                cur, start, skipped = [], i + 1, skip_next
+            elif s:
+                skip_next = s == SKIP_MARK
+        elif s == "```":
+            blocks.append((start, "\n".join(cur), skipped))
+            cur, skip_next = None, False
+        else:
+            cur.append(line)
+    if cur is not None:
+        raise SystemExit(f"{path}:{start}: unclosed ```python fence")
+    return blocks
+
+
+def run_file(path: str) -> tuple[int, int, list[str]]:
+    """Execute a file's blocks cumulatively; returns (ran, skipped, errors)."""
+
+    ns: dict = {"__name__": f"__docsmoke_{path}__"}
+    ran = skipped = 0
+    errors: list[str] = []
+    for lineno, code, skip in extract_blocks(path):
+        if skip:
+            skipped += 1
+            print(f"  {path}:{lineno}: skipped (marker)")
+            continue
+        t0 = time.perf_counter()
+        try:
+            # pad so tracebacks point at the real markdown line numbers
+            exec(compile("\n" * (lineno - 1) + code, path, "exec"), ns)
+            print(f"  {path}:{lineno}: ok ({time.perf_counter() - t0:.1f}s)")
+            ran += 1
+        except Exception:
+            errors.append(f"{path}:{lineno}")
+            print(f"  {path}:{lineno}: FAILED", file=sys.stderr)
+            traceback.print_exc()
+            break           # later blocks in this file depend on this one
+    return ran, skipped, errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=DEFAULT,
+                    help="markdown files (default: docs/*.md README.md)")
+    args = ap.parse_args()
+
+    total = skipped = 0
+    failures: list[str] = []
+    for path in args.files:
+        print(f"{path}:")
+        r, s, errs = run_file(path)
+        total += r
+        skipped += s
+        failures.extend(errs)
+    print(f"\n{total} snippet(s) passed, {skipped} skipped"
+          + (f", {len(failures)} FAILED: {', '.join(failures)}"
+             if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,6 +28,7 @@ from repro.mc.problem import CompletionProblem, EngineOptions
 from repro.mc.schedules import (
     FullGD,
     Gossip,
+    Incremental,
     Schedule,
     Sequential,
     Wave,
@@ -47,6 +48,7 @@ __all__ = [
     "FitResult",
     "FullGD",
     "Gossip",
+    "Incremental",
     "Schedule",
     "Sequential",
     "Trainer",

@@ -52,12 +52,16 @@ class EngineOptions:
     chunk      : segment-reduce chunk size; None = kernels' SEG_CHUNK.
                  Swept by ``benchmarks/sparse_vs_dense.py --chunks``.
     bucket     : padded-COO capacity quantum for sparse ingest
+    headroom   : per-block append slack pre-allocated at sparse ingest, so
+                 ``CompletionProblem.append`` splices streaming entries in
+                 place instead of overflowing (DESIGN.md §11)
     """
 
     use_kernel: bool = False
     method: str = "segment"
     chunk: Optional[int] = None
     bucket: int = sparse_mod.DEFAULT_BUCKET
+    headroom: int = 0
 
     def __post_init__(self) -> None:
         if self.method not in ("segment", "scatter"):
@@ -68,6 +72,10 @@ class EngineOptions:
             raise ValueError(f"chunk must be positive, got {self.chunk}")
         if self.bucket <= 0:
             raise ValueError(f"bucket must be positive, got {self.bucket}")
+        if self.headroom < 0:
+            raise ValueError(
+                f"headroom must be non-negative, got {self.headroom}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,16 +115,21 @@ class CompletionProblem:
         engine: EngineOptions | None = None,
         mean_center: bool = False,
         dataset: MCDataset | None = None,
+        headroom: int | None = None,
     ) -> "CompletionProblem":
         """From a dense (m, n) matrix + 0/1 observation mask.  Pads to the
         grid, blockifies, and converts to the sparse store when
-        ``layout="sparse"``."""
+        ``layout="sparse"``.  ``headroom`` pre-allocates per-block append
+        slack in the sparse store for :meth:`append` (streaming
+        ingestion); it overrides ``engine.headroom``."""
 
         if layout not in ("dense", "sparse"):
             raise ValueError(
                 f"unknown layout {layout!r}; expected 'dense' or 'sparse'"
             )
         engine = engine or EngineOptions()
+        if headroom is not None:
+            engine = dataclasses.replace(engine, headroom=headroom)
         x = np.asarray(x, np.float32)
         mask = np.asarray(mask, np.float32)
         if x.shape != mask.shape or x.ndim != 2:
@@ -134,7 +147,8 @@ class CompletionProblem:
         dense = make_problem(xp, mp, spec)
         data: Union[Problem, SparseProblem] = dense
         if layout == "sparse":
-            data = sparse_mod.from_blocks(dense.xb, dense.maskb, engine.bucket)
+            data = sparse_mod.from_blocks(dense.xb, dense.maskb,
+                                          engine.bucket, engine.headroom)
         rows, cols = np.nonzero(mask)
         return cls(data=data, spec=spec, engine=engine, num_users=m0,
                    num_items=n0, seen_coo=(rows.astype(np.int64),
@@ -156,12 +170,17 @@ class CompletionProblem:
         engine: EngineOptions | None = None,
         mean_center: bool = False,
         dataset: MCDataset | None = None,
+        headroom: int | None = None,
     ) -> "CompletionProblem":
         """From a global COO triplet list — the streaming-ingestion path.
         ``layout="sparse"`` (default) never materializes the dense matrix;
-        ``layout="dense"`` scatters into dense tensors first."""
+        ``layout="dense"`` scatters into dense tensors first.  ``headroom``
+        pre-allocates per-block append slack so :meth:`append` can splice
+        future ratings in place (overrides ``engine.headroom``)."""
 
         engine = engine or EngineOptions()
+        if headroom is not None:
+            engine = dataclasses.replace(engine, headroom=headroom)
         m0, n0 = shape
         rows = np.asarray(rows, np.int64)
         cols = np.asarray(cols, np.int64)
@@ -180,7 +199,8 @@ class CompletionProblem:
                 f"unknown layout {layout!r}; expected 'dense' or 'sparse'"
             )
         sp, (m, n) = sparse_mod.from_entries(
-            rows, cols, vals - mu if mu else vals, m0, n0, p, q, engine.bucket
+            rows, cols, vals - mu if mu else vals, m0, n0, p, q,
+            engine.bucket, engine.headroom,
         )
         spec = G.GridSpec(m, n, p, q, rank)
         order = np.argsort(rows, kind="stable")   # seen table wants user-sorted
@@ -199,14 +219,16 @@ class CompletionProblem:
         layout: str = "dense",
         engine: EngineOptions | None = None,
         mean_center: bool = False,
+        headroom: int | None = None,
     ) -> "CompletionProblem":
         """From an ``MCDataset`` (synthetic low-rank, MovieLens proxy, or a
         loaded ratings file); keeps the held-out test split attached for
-        eval-RMSE callbacks and ``FitResult.rmse()``."""
+        eval-RMSE callbacks and ``FitResult.rmse()``.  ``headroom``
+        pre-allocates append slack for streaming :meth:`append`."""
 
         return cls.from_dense(ds.x, ds.train_mask, p, q, rank, layout=layout,
                               engine=engine, mean_center=mean_center,
-                              dataset=ds)
+                              dataset=ds, headroom=headroom)
 
     # ------------------------------------------------------------------ #
     # derived views
@@ -237,7 +259,8 @@ class CompletionProblem:
             return self
         if layout == "sparse":
             data = sparse_mod.from_blocks(
-                self.data.xb, self.data.maskb, self.engine.bucket
+                self.data.xb, self.data.maskb, self.engine.bucket,
+                self.engine.headroom,
             )
         elif layout == "dense":
             xb, maskb = sparse_mod.to_dense(self.data, self.spec.mb,
@@ -248,6 +271,76 @@ class CompletionProblem:
                 f"unknown layout {layout!r}; expected 'dense' or 'sparse'"
             )
         return dataclasses.replace(self, data=data)
+
+    # ------------------------------------------------------------------ #
+    # streaming ingestion
+    # ------------------------------------------------------------------ #
+
+    def append(self, rows, cols, vals) -> "CompletionProblem":
+        """New ratings spliced into the problem's store — the streaming
+        ingestion path (DESIGN.md §11).
+
+        ``rows``/``cols`` are true (pre-padding) user/item indices; values
+        are mean-centered by the problem's μ automatically.  On the sparse
+        layout the entries are merged into the sorted padded-COO store in
+        place capacity-wise (pre-allocate slack with ``headroom=`` at
+        ingest; a full bucket raises with the headroom that would have
+        absorbed the append).  On the dense layout they scatter into the
+        block tensors.  A (user, item) pair already rated updates its value
+        (an edited rating); duplicate pairs within the batch resolve to the
+        last occurrence; an empty append returns ``self``.
+
+        Returns a new problem sharing the spec/engine/dataset; the
+        seen-item table grows so serving built from a refit excludes the
+        new ratings.  Appends never grow the matrix — new users or items
+        need a fresh :meth:`from_entries` ingest (and a cold fit, since
+        factor shapes change)."""
+
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        vals = np.asarray(vals, np.float32)
+        if not (rows.shape == cols.shape == vals.shape) or rows.ndim != 1:
+            raise ValueError(
+                f"rows/cols/vals must be equal-length 1-D arrays, got "
+                f"{rows.shape}/{cols.shape}/{vals.shape}"
+            )
+        if len(rows) == 0:
+            return self
+        if (rows.min() < 0 or rows.max() >= self.num_users
+                or cols.min() < 0 or cols.max() >= self.num_items):
+            raise ValueError(
+                f"append indices out of range for the "
+                f"{self.num_users}x{self.num_items} matrix: rows in "
+                f"[{rows.min()}, {rows.max()}], cols in "
+                f"[{cols.min()}, {cols.max()}] — appends cover existing "
+                f"users/items; a grown matrix needs a fresh from_entries "
+                f"ingest (factor shapes change)"
+            )
+        rows, cols, vals = sparse_mod.store.dedupe_last_write(
+            rows, cols, vals, self.num_items
+        )
+        cvals = vals - self.mu if self.mu else vals
+        if isinstance(self.data, SparseProblem):
+            data: Union[Problem, SparseProblem] = sparse_mod.append_entries(
+                self.data, rows, cols, cvals
+            )
+        else:
+            mb, nb = self.spec.mb, self.spec.nb
+            bi, rr = rows // mb, rows % mb
+            bj, cc = cols // nb, cols % nb
+            data = Problem(
+                self.data.xb.at[bi, bj, rr, cc].set(jax.numpy.asarray(cvals)),
+                self.data.maskb.at[bi, bj, rr, cc].set(1.0),
+            )
+        if self.seen_coo is not None:
+            ar = np.concatenate([np.asarray(self.seen_coo[0], np.int64), rows])
+            ac = np.concatenate([np.asarray(self.seen_coo[1], np.int64), cols])
+        else:
+            ar, ac = rows, cols
+        ni = max(self.num_items, 1)
+        uniq = np.unique(ar * ni + ac)               # user-sorted + deduped
+        return dataclasses.replace(self, data=data,
+                                   seen_coo=(uniq // ni, uniq % ni))
 
     # ------------------------------------------------------------------ #
     # engine-option-respecting evaluation (what benchmarks time)

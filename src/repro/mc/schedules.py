@@ -6,10 +6,11 @@ consumes the same ``CompletionProblem`` + ``GossipMCConfig`` + PRNG key and
 produces the same ``(State, history)`` pair, so callers swap execution
 strategies without touching data plumbing.
 
-    Sequential — Algorithm 1 verbatim: one random structure per iteration
-    Wave       — ≤8 conflict-free parity waves per round, vectorized
-    FullGD     — deterministic limit: all structures at once (GD on L)
-    Gossip     — distributed shard_map rounds with ppermute halo exchange
+    Sequential  — Algorithm 1 verbatim: one random structure per iteration
+    Wave        — ≤8 conflict-free parity waves per round, vectorized
+    FullGD      — deterministic limit: all structures at once (GD on L)
+    Gossip      — distributed shard_map rounds with ppermute halo exchange
+    Incremental — short wave run sized for ``Trainer.refit`` warm starts
 
 Each schedule wraps the corresponding internal loop in ``core/`` (the same
 code the deprecated ``sequential.fit`` / ``waves.fit`` shims call), so
@@ -104,6 +105,22 @@ class FullGD(Wave):
 
 
 @dataclasses.dataclass(frozen=True)
+class Incremental(Wave):
+    """Warm-start refresh rounds — the default for ``Trainer.refit``.
+
+    Same wave updates as :class:`Wave`, sized for the streaming loop
+    (DESIGN.md §11): after an append the factors are already near the new
+    optimum, so a short run of cheap rounds recovers the cold-fit quality
+    at a fraction of the iterations.  Only the default size differs —
+    resuming from a trained ``State`` is what makes it incremental."""
+
+    num_rounds: int = 40
+    eval_every: int = 0
+
+    name = "incremental"
+
+
+@dataclasses.dataclass(frozen=True)
 class Gossip(Schedule):
     """Distributed full-GD rounds over a device mesh: shard_map tiles the
     (p, q) block grid, factor edges travel by ``ppermute`` (one ICI hop),
@@ -181,6 +198,7 @@ _BY_NAME = {
     "full": FullGD,
     "full_gd": FullGD,
     "gossip": Gossip,
+    "incremental": Incremental,
 }
 
 

@@ -12,6 +12,10 @@ One ``fit`` for every execution strategy:
     svc = result.to_service(k=10)          # straight into serving
     items, scores = svc.recommend(user_ids)
 
+    fresh = problem.append(new_rows, new_cols, new_vals)
+    result = Trainer(cfg).refit(result, fresh)     # warm-start refresh
+    svc.refresh(result)                            # hot-swap the index
+
 ``FitResult`` carries the final ``State``, the (t, cost) loss trace,
 wall-clock stats, and the bridges into evaluation (``factors``, ``rmse``)
 and serving (``to_recommend_index`` → ``serve.recommend``).
@@ -191,3 +195,48 @@ class Trainer:
         for cb in self.callbacks:
             cb.on_fit_end(result)
         return result
+
+    def refit(
+        self,
+        result: FitResult,
+        problem: CompletionProblem | None = None,
+        schedule: Union[str, Schedule, None] = None,
+        *,
+        seed: int = 0,
+        reset_clock: bool = False,
+        **schedule_overrides,
+    ) -> FitResult:
+        """Warm-start refresh from a finished fit — the incremental half of
+        the streaming loop (DESIGN.md §11).
+
+        Resumes from ``result``'s trained ``(U, W)`` factors against
+        ``problem`` (typically ``result.problem.append(...)``'s output;
+        defaults to ``result.problem``) and runs only the cheap incremental
+        rounds — ``schedule`` defaults to :class:`~repro.mc.Incremental`,
+        a short wave run.  The paper's iteration clock ``t`` carries over,
+        so the γ_t = a/(1+bt) step size continues its decay (fine-tuning
+        steps, not a restarted descent); ``reset_clock=True`` restarts the
+        step-size schedule for appends that shift the data distribution
+        hard.  The refreshed ``FitResult`` feeds straight into
+        ``RecommendIndex.refresh`` / ``RecommendService.refresh``."""
+
+        if problem is None:
+            problem = result.problem
+        if not isinstance(problem, CompletionProblem):
+            raise TypeError(
+                f"Trainer.refit expects a CompletionProblem, got "
+                f"{type(problem).__name__}"
+            )
+        if problem.spec != result.problem.spec:
+            raise ValueError(
+                f"refit needs matching factor shapes: new problem grid "
+                f"{problem.spec} != fitted grid {result.problem.spec}; a "
+                f"reshaped problem needs a cold Trainer.fit"
+            )
+        state = result.state
+        if reset_clock:
+            state = state._replace(t=state.t * 0)
+        if schedule is None:
+            schedule = "incremental"
+        return self.fit(problem, schedule, seed=seed, state=state,
+                        **schedule_overrides)

@@ -12,7 +12,9 @@ The seen-item table is a padded (m, S) int32 ragged list; padding slots
 hold ``n`` (one past the last item id) and are dropped by the scatter's
 out-of-bounds mode, so no per-user bucketing logic exists at serve time.
 ``RecommendService`` adds fixed-batch chunking (pad the tail batch, keep one
-jit cache entry) — the shape discipline that a production front-end needs.
+jit cache entry) — the shape discipline that a production front-end needs —
+and ``refresh(fit_result)`` hot-swaps the index after a streaming
+``Trainer.refit`` without touching the serving loop (DESIGN.md §11).
 
 Throughput bench: ``benchmarks/serve_recommend.py``.
 """
@@ -38,6 +40,25 @@ class RecommendIndex(NamedTuple):
     u: jax.Array      # (m, r) float32 — user factors
     w: jax.Array      # (n, r) float32 — item factors
     seen: jax.Array   # (m, S) int32 — items to exclude; pad value == n
+
+    def refresh(self, fit_result) -> "RecommendIndex":
+        """Rebuild from a (re)fit without a serving restart — the read
+        side of the streaming loop (DESIGN.md §11): new factors plus the
+        updated seen-item table, so just-appended ratings stop being
+        recommended back.  The index is immutable; swap the returned value
+        in (``RecommendService.refresh`` does exactly that).  The catalog
+        and user counts must match — appends never grow the matrix, so a
+        reshaped problem means this index is serving the wrong universe."""
+
+        new = fit_result.to_recommend_index()
+        if new.u.shape != self.u.shape or new.w.shape != self.w.shape:
+            raise ValueError(
+                f"refresh changes the factor shapes: index serves "
+                f"{self.u.shape[0]} users x {self.w.shape[0]} items, fit has "
+                f"{new.u.shape[0]} x {new.w.shape[0]}; a re-shaped problem "
+                f"needs a new build_index, not a refresh"
+            )
+        return new
 
 
 def build_seen_table_coo(rows: np.ndarray, cols: np.ndarray,
@@ -156,6 +177,15 @@ class RecommendService:
     def num_items(self) -> int:
         return self.index.w.shape[0]
 
+    def refresh(self, fit_result) -> "RecommendService":
+        """Hot-swap the index from a (re)fit: same batch/k/jit cache, new
+        factors + seen table.  In-flight ``recommend`` calls are unaffected
+        (the old index is immutable); the next call serves the refresh.
+        Returns ``self`` for chaining."""
+
+        self.index = self.index.refresh(fit_result)
+        return self
+
     def recommend(self, user_ids) -> tuple[np.ndarray, np.ndarray]:
         """(items, scores) arrays of shape (len(user_ids), k)."""
 
@@ -163,13 +193,14 @@ class RecommendService:
         n = len(user_ids)
         out_items = np.empty((n, self.k), np.int32)
         out_scores = np.empty((n, self.k), np.float32)
-        for s in range(0, n, self.batch):
+        index = self.index      # snapshot: a concurrent refresh never mixes
+        for s in range(0, n, self.batch):           # universes within a call
             chunk = user_ids[s : s + self.batch]
             pad = self.batch - len(chunk)
             if pad:
                 chunk = np.pad(chunk, (0, pad))
             items, scores = recommend_topk(
-                self.index, jnp.asarray(chunk),
+                index, jnp.asarray(chunk),
                 k=self.k, exclude_seen=self.exclude_seen,
             )
             take = min(self.batch, n - s)

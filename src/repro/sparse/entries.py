@@ -29,6 +29,13 @@ Leading batch axes are free: the store stacks blocks as (p, q, ...), the
 schedulers gather structure trios as (3, ...), and ``jax.vmap`` peels axes
 off every leaf at once — that is the point of making this a pytree.
 
+The entry capacity E is fixed at ingest (max block nnz + headroom, rounded
+to a bucket) and **never changes afterwards**: streaming appends
+(``sparse.append_entries``) splice new entries into the sorted prefix and
+patch the aux views inside the same capacity, so a bundle's shapes — and
+every jitted consumer compiled against them — survive online ingestion
+unchanged (DESIGN.md §11).
+
 This module is a dependency-free leaf (jax only) so every layer can import
 it without cycles.
 """

@@ -25,9 +25,15 @@ stream stays non-decreasing end to end and gathers may legally advertise
 ``indices_are_sorted``), cols=0, vals=0, valid=0 and contribute nothing to
 any sum.
 
-``E`` is the per-block entry capacity: the maximum block nnz rounded up to a
-*bucket* multiple, so recompilation only triggers when occupancy crosses a
-bucket boundary, never per-matrix.  The leading (p, q) axes shard exactly
+``E`` is the per-block entry capacity: the maximum block nnz plus the
+requested *headroom* (pre-allocated append slack for streaming ingestion),
+rounded up to a *bucket* multiple, so recompilation only triggers when
+occupancy crosses a bucket boundary, never per-matrix.  New ratings arrive
+through :func:`append_entries`: each entry is routed to its block, spliced
+into the (row, col) sorted order inside the existing capacity, and the
+``col_perm``/``row_ptr``/``col_ptr`` aux views are patched incrementally —
+no full re-sort, no shape change, so every jitted consumer keeps its
+compiled executable (DESIGN.md §11).  The leading (p, q) axes shard exactly
 like the dense tensors (P(row_axes, col_axes)), so the distributed gossip
 step reuses its halo protocol unchanged.  ``SparseProblem.pspec`` is the
 one place that knows the pytree structure for shard_map specs — adding a
@@ -94,6 +100,14 @@ class SparseProblem(NamedTuple):
         return self.entries.capacity
 
     @property
+    def free_slots(self) -> jax.Array:
+        """(p, q) append slack per block: capacity − nnz, i.e. how many
+        entries :func:`append_entries` can still splice in before the
+        bucket (incl. ingest headroom) overflows."""
+
+        return self.capacity - self.nnz
+
+    @property
     def mb(self) -> int:
         """Block row count (from the CSR offsets — the true shape source)."""
 
@@ -116,22 +130,29 @@ class SparseProblem(NamedTuple):
         )
 
 
-def bucketed_capacity(max_nnz: int, bucket: int = DEFAULT_BUCKET) -> int:
-    """Round the largest block nnz up to a bucket multiple (≥ one bucket)."""
+def bucketed_capacity(max_nnz: int, bucket: int = DEFAULT_BUCKET,
+                      headroom: int = 0) -> int:
+    """Per-block capacity: largest block nnz plus the requested append
+    headroom, rounded up to a bucket multiple (≥ one bucket).  The
+    headroom is part of the reported capacity — a store ingested with
+    ``headroom=h`` is guaranteed ≥ h free slots in every block."""
 
     if bucket <= 0:
         raise ValueError(f"bucket must be positive, got {bucket}")
-    return max(bucket, (max_nnz + bucket - 1) // bucket * bucket)
+    if headroom < 0:
+        raise ValueError(f"headroom must be non-negative, got {headroom}")
+    return max(bucket, (max_nnz + headroom + bucket - 1) // bucket * bucket)
 
 
-def _pack_sorted(blk, rr, cc, vv, p, q, mb, nb, bucket) -> SparseProblem:
+def _pack_sorted(blk, rr, cc, vv, p, q, mb, nb, bucket,
+                 headroom: int = 0) -> SparseProblem:
     """Shared packing tail: (block, row, col)-lexicographically sorted entry
     streams -> the padded, segment-sorted store.  ``blk`` must be
     non-decreasing with (rr, cc) lexicographic within each block."""
 
     total = len(blk)
     nnz = np.bincount(blk, minlength=p * q).astype(np.int64)
-    E = bucketed_capacity(int(nnz.max()) if total else 0, bucket)
+    E = bucketed_capacity(int(nnz.max()) if total else 0, bucket, headroom)
     starts = np.zeros(p * q + 1, np.int64)
     np.cumsum(nnz, out=starts[1:])
     within = np.arange(total, dtype=np.int64) - starts[blk]
@@ -176,7 +197,8 @@ def _pack_sorted(blk, rr, cc, vv, p, q, mb, nb, bucket) -> SparseProblem:
 
 
 def from_blocks(
-    xb: np.ndarray, maskb: np.ndarray, bucket: int = DEFAULT_BUCKET
+    xb: np.ndarray, maskb: np.ndarray, bucket: int = DEFAULT_BUCKET,
+    headroom: int = 0,
 ) -> SparseProblem:
     """Convert blockified dense (p,q,mb,nb) tensors to the sorted store.
 
@@ -185,6 +207,8 @@ def from_blocks(
     ingest stays in numpy kernels.  ``np.nonzero``'s C order already yields
     (block, row, col) lexicographic entries, i.e. the row-sorted (CSR) view;
     the column-sorted (CSC) dual view is one ``np.lexsort`` away.
+    ``headroom`` pre-allocates per-block append slack for
+    :func:`append_entries` (streaming ingestion).
     """
 
     xb = np.asarray(xb)
@@ -192,7 +216,8 @@ def from_blocks(
     p, q, mb, nb = xb.shape
     bi, bj, rr, cc = np.nonzero(maskb)            # C order: row-sorted per block
     blk = bi * q + bj                             # non-decreasing
-    return _pack_sorted(blk, rr, cc, xb[bi, bj, rr, cc], p, q, mb, nb, bucket)
+    return _pack_sorted(blk, rr, cc, xb[bi, bj, rr, cc], p, q, mb, nb,
+                        bucket, headroom)
 
 
 def from_entries(
@@ -204,11 +229,14 @@ def from_entries(
     p: int,
     q: int,
     bucket: int = DEFAULT_BUCKET,
+    headroom: int = 0,
 ) -> tuple[SparseProblem, tuple[int, int]]:
     """Build the sorted store straight from a global COO triplet list —
     no dense (m, n) materialization anywhere, the streaming-ingestion entry
     point.  The grid is padded implicitly (mb = ceil(m/p) etc.); returns
     the store plus the padded (m, n) so callers can build a ``GridSpec``.
+    ``headroom`` pre-allocates per-block append slack so later
+    :func:`append_entries` calls splice in place instead of overflowing.
     Duplicate (row, col) pairs are the caller's responsibility."""
 
     rows = np.asarray(rows, np.int64)
@@ -233,20 +261,22 @@ def from_entries(
     order = np.lexsort((cc, rr, blk))              # (block, row, col) lexicographic
     sp = _pack_sorted(blk[order], rr[order].astype(np.int64),
                       cc[order].astype(np.int64), vals[order],
-                      p, q, mb, nb, bucket)
+                      p, q, mb, nb, bucket, headroom)
     return sp, (mb * p, nb * q)
 
 
 def from_dataset(
-    ds: MCDataset, p: int, q: int, r: int, bucket: int = DEFAULT_BUCKET
+    ds: MCDataset, p: int, q: int, r: int, bucket: int = DEFAULT_BUCKET,
+    headroom: int = 0,
 ) -> tuple[SparseProblem, G.GridSpec]:
     """Pad to the grid, blockify, and build the store.  Returns the padded
-    GridSpec alongside (the spec's m/n include grid padding)."""
+    GridSpec alongside (the spec's m/n include grid padding).  ``headroom``
+    pre-allocates per-block append slack (streaming ingestion)."""
 
     x, mask, m, n = G.pad_to_grid(ds.x, ds.train_mask, p, q)
     spec = G.GridSpec(m, n, p, q, r)
     xb, maskb = G.blockify(x * mask, mask, spec)
-    return from_blocks(xb, maskb, bucket), spec
+    return from_blocks(xb, maskb, bucket, headroom), spec
 
 
 def to_dense(sp: SparseProblem, mb: int | None = None,
@@ -271,6 +301,161 @@ def to_dense(sp: SparseProblem, mb: int | None = None,
     return xb, maskb
 
 
+def dedupe_last_write(rows, cols, vals, stride: int):
+    """Resolve duplicate (row, col) pairs in a COO batch to the **last**
+    occurrence (an edited rating wins over the one it edits).  ``stride``
+    is the column count of the indexing frame; the single definition of
+    append dedup semantics for both layouts (``append_entries`` and
+    ``CompletionProblem.append``)."""
+
+    lin = rows * stride + cols
+    order = np.argsort(lin, kind="stable")
+    last = np.ones(len(order), bool)
+    last[:-1] = lin[order][1:] != lin[order][:-1]
+    order = order[last]
+    return rows[order], cols[order], vals[order]
+
+
+def append_entries(
+    sp: SparseProblem,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+) -> SparseProblem:
+    """Splice new observed entries into the sorted padded-COO store —
+    streaming ingestion without a re-sort or a shape change.
+
+    ``rows``/``cols`` are global indices in the store's padded frame
+    (p·mb × q·nb).  Each entry is routed to its block and merged into the
+    existing (row, col) lexicographic order at its ``searchsorted``
+    position; the CSR/CSC aux views are patched incrementally —
+    ``row_ptr``/``col_ptr`` gain the cumulated per-row/col insert counts
+    and ``col_perm`` is re-threaded by the same merge in the (col, row)
+    dual order — so the segment-reduce fast path stays valid without ever
+    re-sorting the stored prefix (DESIGN.md §11).  Capacity is untouched:
+    jitted consumers keep their compiled executables, which is the point
+    of pre-allocating ``headroom=`` at ingest.
+
+    A (row, col) pair already present updates its value in place (an
+    edited rating) and costs no slot; duplicate pairs within one append
+    batch resolve to the last occurrence.  An empty append returns ``sp``
+    unchanged.  Raises ``ValueError`` when a block's remaining
+    ``free_slots`` cannot hold the new entries, with the headroom needed
+    to have absorbed the append.
+    """
+
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals, np.float32)
+    if not (rows.shape == cols.shape == vals.shape) or rows.ndim != 1:
+        raise ValueError(
+            f"rows/cols/vals must be equal-length 1-D arrays, got "
+            f"{rows.shape}/{cols.shape}/{vals.shape}"
+        )
+    if len(rows) == 0:
+        return sp
+    p, q = sp.nnz.shape
+    mb, nb = sp.mb, sp.nb
+    m, n = p * mb, q * nb
+    if (rows.min() < 0 or rows.max() >= m
+            or cols.min() < 0 or cols.max() >= n):
+        raise ValueError(
+            f"append indices out of range for the {m}x{n} padded grid: rows "
+            f"in [{rows.min()}, {rows.max()}], cols in "
+            f"[{cols.min()}, {cols.max()}]"
+        )
+
+    rows, cols, vals = dedupe_last_write(rows, cols, vals, n)
+
+    bi, rr = rows // mb, rows % mb
+    bj, cc = cols // nb, cols % nb
+    blk = bi * q + bj
+
+    E = sp.capacity
+    ent = {f: np.asarray(getattr(sp.entries, f)).reshape(p * q, -1).copy()
+           for f in ("rows", "cols", "vals", "valid", "col_perm")}
+    rptr = np.asarray(sp.row_ptr).reshape(p * q, mb + 1).copy()
+    cptr = np.asarray(sp.col_ptr).reshape(p * q, nb + 1).copy()
+    nnz = np.asarray(sp.nnz).reshape(p * q).copy()
+
+    for b in np.unique(blk):
+        sel = blk == b
+        k = int(nnz[b])
+        # new entries in the block's (row, col) lexicographic key order
+        nkey = rr[sel] * nb + cc[sel]
+        ks = np.argsort(nkey)
+        nkey = nkey[ks]
+        nrr, ncc = rr[sel][ks], cc[sel][ks]
+        nvv = vals[sel][ks]
+        ekey = ent["rows"][b, :k].astype(np.int64) * nb + ent["cols"][b, :k]
+        idx = np.searchsorted(ekey, nkey)
+        if k:
+            dup = (idx < k) & (ekey[np.minimum(idx, k - 1)] == nkey)
+        else:
+            dup = np.zeros(len(nkey), bool)
+        if dup.any():                        # edited ratings: value-only patch
+            ent["vals"][b, idx[dup]] = nvv[dup]
+        ins = ~dup
+        n_ins = int(ins.sum())
+        if n_ins == 0:
+            continue
+        k2 = k + n_ins
+        if k2 > E:
+            i, j = divmod(int(b), q)
+            raise ValueError(
+                f"append overflows block ({i},{j}): {k} stored + {n_ins} new "
+                f"entries > capacity {E}; re-ingest with headroom>={k2 - E} "
+                f"more than before (from_entries/from_dataset headroom=) or "
+                f"a larger bucket to pre-allocate append slack"
+            )
+        irr, icc, ivv = nrr[ins], ncc[ins], nvv[ins]
+        # the classic merge, by insertion index: old entry i shifts by the
+        # number of inserts landing at or before it, insert j lands at its
+        # searchsorted position plus the inserts already placed before it
+        pos = np.searchsorted(ekey, nkey[ins])
+        old_dest = np.arange(k) + np.searchsorted(pos, np.arange(k), "right")
+        ins_dest = pos + np.arange(n_ins)
+        # CSC keys of the old prefix, in CSC order — before the splice below
+        old_perm = ent["col_perm"][b, :k]
+        ckey_sorted = (ent["cols"][b, :k].astype(np.int64) * mb
+                       + ent["rows"][b, :k])[old_perm]
+        for f, new in (("rows", irr), ("cols", icc), ("vals", ivv)):
+            merged = np.empty(k2, ent[f].dtype)
+            merged[old_dest] = ent[f][b, :k]
+            merged[ins_dest] = new
+            ent[f][b, :k2] = merged
+        ent["valid"][b, :k2] = 1.0
+        # patch the segment offsets with cumulated per-row/col insert counts
+        rptr[b, 1:] += np.cumsum(np.bincount(irr, minlength=mb)).astype(
+            rptr.dtype)
+        cptr[b, 1:] += np.cumsum(np.bincount(icc, minlength=nb)).astype(
+            cptr.dtype)
+        # same merge in the (col, row) dual order re-threads col_perm: old
+        # CSC slots shift by the inserts sorting before them and map to the
+        # spliced CSR positions of the entries they pointed at
+        corder = np.argsort(icc * mb + irr)
+        cpos = np.searchsorted(ckey_sorted, (icc * mb + irr)[corder])
+        perm2 = np.empty(k2, np.int32)
+        t = np.arange(k)
+        perm2[t + np.searchsorted(cpos, t, "right")] = old_dest[old_perm]
+        perm2[cpos + np.arange(n_ins)] = ins_dest[corder]
+        ent["col_perm"][b, :k2] = perm2
+        ent["col_perm"][b, k2:] = np.arange(k2, E)   # padding -> itself
+        nnz[b] = k2
+
+    entries = BlockEntries(
+        jnp.asarray(ent["rows"].reshape(p, q, E)),
+        jnp.asarray(ent["cols"].reshape(p, q, E)),
+        jnp.asarray(ent["vals"].reshape(p, q, E)),
+        jnp.asarray(ent["valid"].reshape(p, q, E)),
+        jnp.asarray(ent["col_perm"].reshape(p, q, E)),
+        jnp.asarray(rptr.reshape(p, q, mb + 1)),
+        jnp.asarray(cptr.reshape(p, q, nb + 1)),
+    )
+    return SparseProblem(entries,
+                         jnp.asarray(nnz.reshape(p, q).astype(np.int32)))
+
+
 def density(sp: SparseProblem, spec: G.GridSpec | int | None = None,
             nb: int | None = None) -> float:
     """Fraction of observed entries.
@@ -278,6 +463,11 @@ def density(sp: SparseProblem, spec: G.GridSpec | int | None = None,
     Block shape comes from a ``GridSpec`` (``density(sp, spec)``), from the
     store's own CSR/CSC offsets (``density(sp)``), or from explicit
     ``density(sp, mb, nb)`` ints for backwards compatibility.
+
+    The denominator is the (padded) matrix area p·q·mb·nb, **not** the
+    store's slot count: padding and pre-allocated headroom slots are
+    excluded, so density reports how sparse the data is, never how full
+    the buckets are (that is ``sp.free_slots``).
     """
 
     if isinstance(spec, G.GridSpec):

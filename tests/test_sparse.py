@@ -60,21 +60,19 @@ def test_pad_blockify_unblockify_roundtrip():
     np.testing.assert_array_equal(G.unblockify(mb, spec), mp_)
 
 
-@pytest.mark.parametrize("density,seed", [(0.0, 0), (0.07, 1), (0.4, 2), (1.0, 3)])
-def test_from_blocks_sorted_layout_invariants(density, seed):
-    """The store is segment-sorted: rows non-decreasing (cols within a row
-    increasing), CSR/CSC offsets consistent with per-row/col counts, and
-    col_perm a valid column-sorted view of the real entries."""
+def check_sorted_store_invariants(sp):
+    """Shared sorted-store invariant checker (reused by
+    tests/test_streaming.py on appended stores): per block, real entries in
+    (row, col) lexicographic order with a non-decreasing padding tail,
+    CSR/CSC offsets equal to per-row/col counts, and col_perm a valid
+    column-sorted permutation whose padding slots never hit real entries."""
 
-    rng = np.random.default_rng(seed)
-    p, q, mb, nb = 2, 3, 11, 7
-    mask = (rng.random((p, q, mb, nb)) < density).astype(np.float32)
-    x = rng.normal(size=(p, q, mb, nb)).astype(np.float32) * mask
-    sp = sparse.from_blocks(x, mask, bucket=32)
     rows, cols = np.asarray(sp.rows), np.asarray(sp.cols)
     nnz = np.asarray(sp.nnz)
     rptr, cptr = np.asarray(sp.row_ptr), np.asarray(sp.col_ptr)
     perm = np.asarray(sp.col_perm)
+    mb, nb = sp.mb, sp.nb
+    p, q = nnz.shape
     for i in range(p):
         for j in range(q):
             k = int(nnz[i, j])
@@ -100,6 +98,20 @@ def test_from_blocks_sorted_layout_invariants(density, seed):
             assert np.all(perm[i, j, k:] >= k)
 
 
+@pytest.mark.parametrize("density,seed", [(0.0, 0), (0.07, 1), (0.4, 2), (1.0, 3)])
+def test_from_blocks_sorted_layout_invariants(density, seed):
+    """The store is segment-sorted: rows non-decreasing (cols within a row
+    increasing), CSR/CSC offsets consistent with per-row/col counts, and
+    col_perm a valid column-sorted view of the real entries."""
+
+    rng = np.random.default_rng(seed)
+    p, q, mb, nb = 2, 3, 11, 7
+    mask = (rng.random((p, q, mb, nb)) < density).astype(np.float32)
+    x = rng.normal(size=(p, q, mb, nb)).astype(np.float32) * mask
+    sp = sparse.from_blocks(x, mask, bucket=32)
+    check_sorted_store_invariants(sp)
+
+
 def test_bucketed_capacity_guard():
     assert sparse.bucketed_capacity(100, 64) == 128
     assert sparse.bucketed_capacity(0, 64) == 64
@@ -107,6 +119,25 @@ def test_bucketed_capacity_guard():
         sparse.bucketed_capacity(100, 0)
     with pytest.raises(ValueError):
         sparse.bucketed_capacity(100, -8)
+
+
+def test_bucketed_capacity_accounts_for_headroom():
+    """The capacity report includes the pre-allocated append slack: a store
+    ingested with headroom=h is guaranteed ≥ h free slots per block."""
+
+    assert sparse.bucketed_capacity(100, 64, headroom=0) == 128
+    assert sparse.bucketed_capacity(100, 64, headroom=70) == 192
+    assert sparse.bucketed_capacity(0, 64, headroom=1) == 64
+    with pytest.raises(ValueError, match="headroom"):
+        sparse.bucketed_capacity(100, 64, headroom=-1)
+
+    spec, cfg, prob, sp = _problem(density=0.2)
+    sp_h = sparse.from_blocks(prob.xb, prob.maskb, bucket=64, headroom=100)
+    assert sp_h.capacity >= sp.capacity + 100 - 64      # slack really exists
+    assert int(jnp.min(sp_h.free_slots)) >= 100
+    # headroom is storage, not data: density must not see it
+    assert sparse.density(sp_h, spec) == sparse.density(sp, spec)
+    np.testing.assert_array_equal(np.asarray(sp_h.nnz), np.asarray(sp.nnz))
 
 
 def test_density_block_shape_sources():

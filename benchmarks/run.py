@@ -24,7 +24,7 @@ def main() -> None:
     kernels_bench.main()
 
     from benchmarks import gossip_comm
-    gossip_comm.main()
+    gossip_comm.main([])      # empty argv: don't re-parse run.py's flags
 
     from benchmarks import roofline_bench
     roofline_bench.main()

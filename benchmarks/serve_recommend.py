@@ -7,11 +7,16 @@ latency) on a MovieLens-scale serving index.  Two index sources:
   depend on factor values, so this isolates pure serving throughput;
 * ``--from-fit``: the full session-API path — train a MovieLens proxy with
   ``Trainer.fit`` and bridge into serving via
-  ``FitResult.to_recommend_index()`` (shapes then come from the proxy).
+  ``FitResult.to_recommend_index()`` (shapes then come from the proxy);
+* ``--sharded``: shard the item axis over every available device
+  (``MeshPlan.for_devices`` + two-stage top-k) — run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU to
+  exercise the multi-device path (the CI multidevice-smoke job does).
 
     PYTHONPATH=src python benchmarks/serve_recommend.py \
         [--users 6040] [--items 3706] [--rank 16] [--batch 256] [--k 10] \
-        [--iters 50] [--density 0.02] [--from-fit] [--rounds 30] [--json PATH]
+        [--iters 50] [--density 0.02] [--from-fit] [--rounds 30] \
+        [--sharded] [--json PATH]
 """
 
 from __future__ import annotations
@@ -24,8 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.mesh import MeshPlan
 from repro.serve.recommend import (RecommendIndex, build_seen_table,
-                                   recommend_topk)
+                                   recommend_topk, recommend_topk_sharded,
+                                   shard_index)
 
 
 def _random_index(args) -> RecommendIndex:
@@ -73,6 +80,9 @@ def main():
                          "through Trainer.fit + to_recommend_index()")
     ap.add_argument("--rounds", type=int, default=30,
                     help="wave rounds for --from-fit")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the item axis over all devices "
+                         "(MeshPlan.for_devices + two-stage top-k)")
     ap.add_argument("--json", type=str, default=None,
                     help="write results as JSON to this path")
     args = ap.parse_args()
@@ -80,24 +90,33 @@ def main():
     index = _fitted_index(args) if args.from_fit else _random_index(args)
     num_users, num_items = index.u.shape[0], index.w.shape[0]
 
+    shards = 1
+    if args.sharded:
+        plan = MeshPlan.for_devices()
+        sidx = shard_index(index, plan)
+        shards = sidx.num_item_shards
+        query = lambda ub: recommend_topk_sharded(sidx, ub, k=args.k)
+    else:
+        query = lambda ub: recommend_topk(index, ub, k=args.k)
+
     rng = np.random.default_rng(1)
     user_batches = [
         jnp.asarray(rng.integers(0, num_users, args.batch), jnp.int32)
         for _ in range(args.iters)
     ]
     # warmup/compile
-    recommend_topk(index, user_batches[0], k=args.k)[0].block_until_ready()
+    query(user_batches[0])[0].block_until_ready()
 
     t0 = time.perf_counter()
     for ub in user_batches:
-        items, scores = recommend_topk(index, ub, k=args.k)
+        items, scores = query(ub)
     items.block_until_ready()
     dt = time.perf_counter() - t0
 
     total_users = args.batch * args.iters
     per_batch_ms = dt / args.iters * 1e3
     print(f"index: {num_users} users x {num_items} items, rank {args.rank}, "
-          f"seen table width {index.seen.shape[1]} "
+          f"seen table width {index.seen.shape[1]}, {shards} item shard(s) "
           f"(backend={jax.default_backend()})")
     print(f"batch={args.batch} k={args.k}: {per_batch_ms:.2f} ms/batch, "
           f"{total_users / dt:,.0f} users/s, "
@@ -110,7 +129,9 @@ def main():
             "config": {"users": num_users, "items": num_items,
                        "rank": args.rank, "batch": args.batch, "k": args.k,
                        "iters": args.iters, "density": args.density,
-                       "from_fit": bool(args.from_fit)},
+                       "from_fit": bool(args.from_fit),
+                       "sharded": bool(args.sharded),
+                       "item_shards": shards},
             "per_batch_ms": per_batch_ms,
             "users_per_s": total_users / dt,
             "scores_per_s": total_users * num_items / dt,

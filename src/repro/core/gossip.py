@@ -34,6 +34,7 @@ from repro.config import GossipMCConfig
 from repro.core import objective as obj
 from repro.core.state import Problem, State
 from repro.core import compress as C
+from repro.mesh.plan import MeshPlan
 from repro.sparse.store import SparseProblem
 
 
@@ -138,6 +139,7 @@ def make_gossip_step(
     spec_pq: tuple[int, int],
     cfg: GossipMCConfig,
     *,
+    plan: MeshPlan | None = None,
     row_axes="data",
     col_axes="model",
     staleness: int = 1,
@@ -153,17 +155,32 @@ def make_gossip_step(
 
     Returns (step_fn, in_shardings) where
     ``step_fn(problem, carry) -> carry`` advances ``steps_per_call`` rounds.
-    Arrays are sharded P(row_axes, col_axes) on their leading (p, q) dims.
+    Placement comes from the ``MeshPlan``: every grid-stacked array shards
+    on its leading (p, q) dims per ``plan.grid_spec``.  Passing
+    ``mesh``/``row_axes``/``col_axes`` without a plan builds the
+    equivalent plan — ``plan`` wins when both are given.
 
     ``layout="sparse"`` expects a ``SparseProblem`` (padded-COO store) and
     runs each round's f-gradients on nnz-proportional compute; the halo
     exchange is identical in both layouts — only factor edges ever travel.
-    ``method``/``chunk`` select the sparse gradient engine (see
-    ``repro.mc.EngineOptions``).  The session-level entry point is
-    ``repro.mc.Trainer.fit(problem, schedule=Gossip(...))``.
+    Hand a store already placed by ``ShardedEntries``/``plan.place_entries``
+    and the jitted step consumes the device-resident shards directly (no
+    input resharding).  ``method``/``chunk`` select the sparse gradient
+    engine (see ``repro.mc.EngineOptions``).  The session-level entry
+    point is ``repro.mc.Trainer.fit(problem, schedule=Gossip(...))``.
     """
 
     p, q = spec_pq
+    if plan is None:
+        plan = MeshPlan.build(p, q, mesh=mesh, row_axes=row_axes,
+                              col_axes=col_axes)
+    elif (plan.p, plan.q) != (p, q):
+        raise ValueError(
+            f"plan is for a {plan.p}x{plan.q} grid, problem has {p}x{q}"
+        )
+    mesh = plan.mesh
+    row_axes = plan.row_spec_axes
+    col_axes = plan.col_spec_axes
     rho, lam, a, b = cfg.rho, cfg.lam, cfg.a, cfg.b
     n_struct = 2 * (p - 1) * (q - 1)
 
@@ -207,22 +224,19 @@ def make_gossip_step(
         carry, _ = jax.lax.scan(body, carry, jnp.arange(steps_per_call))
         return carry
 
-    pspec2 = P(row_axes, col_axes)
-    rep = P()
+    # every placement decision reads the plan: store leaves and factor
+    # stacks shard on their leading (p, q) axes, halos/error-feedback on
+    # their single grid axis — MeshPlan is the source of truth, so new
+    # store fields or axis layouts never touch this scheduler
+    pspec2 = plan.grid_spec
     if layout == "sparse":
-        # every leaf of the store pytree — entry tensors, nnz, sorted-layout
-        # offsets — shards on its leading (p, q) axes; the store owns the
-        # structure (SparseProblem.pspec), so new fields never touch here
-        problem_spec = SparseProblem.pspec(pspec2)
+        problem_spec = plan.entries_spec()
     else:
         problem_spec = Problem(pspec2, pspec2)
-    state_spec = State(pspec2, pspec2, rep)
-    halo_spec = HaloState(
-        P(row_axes), P(row_axes), P(col_axes), P(col_axes)
-    )
-    carry_spec = GossipCarry(
-        state_spec, halo_spec, P(row_axes), P(row_axes), P(col_axes), P(col_axes)
-    )
+    state_spec = plan.state_spec()
+    re_, ce = plan.row_edge_spec, plan.col_edge_spec
+    halo_spec = HaloState(re_, re_, ce, ce)
+    carry_spec = GossipCarry(state_spec, halo_spec, re_, re_, ce, ce)
 
     step = jax.jit(
         _shard_map(
@@ -257,34 +271,43 @@ def init_carry(state: State) -> GossipCarry:
     )
 
 
-def distributed_cost(mesh, problem: Problem | SparseProblem, state: State,
-                     lam: float, row_axes="data", col_axes="model"):
-    """Σ f + λ‖·‖² with a single final psum (evaluation only).
+@functools.lru_cache(maxsize=None)
+def _distributed_cost_fn(plan: MeshPlan, lam: float, sparse: bool):
+    """Jitted Σ-cost for one (plan, λ, layout) — cached so eval
+    boundaries inside a fit (and successive fits on the same plan) reuse
+    the compiled program instead of re-jitting per call."""
 
-    Works for both layouts: the local tile cost dispatches on the problem
-    pytree (dense tensors vs padded-COO store)."""
-
-    pspec2 = P(row_axes, col_axes)
-
-    axes: tuple = ()
-    for a in (row_axes, col_axes):
-        axes += tuple(a) if isinstance(a, (tuple, list)) else (a,)
-
-    if isinstance(problem, SparseProblem):
-        problem_spec = SparseProblem.pspec(pspec2)
-    else:
-        problem_spec = Problem(pspec2, pspec2)
+    pspec2 = plan.grid_spec
+    axes = plan.all_axes
+    problem_spec = plan.entries_spec() if sparse else Problem(pspec2, pspec2)
 
     def local_cost(prob, U, W):
         c = obj.total_cost(prob, U, W, lam)
         return jax.lax.psum(c, axes)
 
-    fn = jax.jit(
+    return jax.jit(
         _shard_map(
-            local_cost, mesh=mesh,
+            local_cost, mesh=plan.mesh,
             in_specs=(problem_spec, pspec2, pspec2),
             out_specs=P(),
             check_vma=False,
         )
     )
+
+
+def distributed_cost(mesh, problem: Problem | SparseProblem, state: State,
+                     lam: float, row_axes="data", col_axes="model",
+                     plan: MeshPlan | None = None):
+    """Σ f + λ‖·‖² with a single final psum (evaluation only).
+
+    Works for both layouts: the local tile cost dispatches on the problem
+    pytree (dense tensors vs padded-COO store)."""
+
+    if plan is None:
+        p, q = problem.nnz.shape if isinstance(problem, SparseProblem) \
+            else problem.xb.shape[:2]
+        plan = MeshPlan.build(p, q, mesh=mesh, row_axes=row_axes,
+                              col_axes=col_axes)
+    fn = _distributed_cost_fn(plan, float(lam),
+                              isinstance(problem, SparseProblem))
     return fn(problem, state.U, state.W)

@@ -1,0 +1,81 @@
+"""Per-backend segment-reduce chunk selection (``EngineOptions.chunk=None``).
+
+PR 2 made the two-level segment reduction's chunk size a tunable; PR 3
+exposed it as ``EngineOptions.chunk`` and taught
+``benchmarks/sparse_vs_dense.py --chunks`` to sweep it.  This module
+closes the loop: ``resolve_chunk(None)`` consults the **committed** sweep
+results (``benchmarks/BENCH_sparse.json``) for the running backend and
+picks the chunk minimizing total gradient time across the swept
+densities; with no committed sweep for this backend it falls back to a
+per-backend default.  Explicit chunks always win — ``resolve_chunk(c)``
+is the identity for ``c is not None``.
+
+The lookup is cached per backend and reads one small JSON at most once
+per process; everything stays deterministic within a run (the resolved
+chunk is a trace-time static, exactly like a hand-passed one).
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+from repro.kernels.sddmm.segment import SEG_CHUNK
+
+# sane defaults when no committed sweep covers the backend: CPU measured
+# fastest at the original SEG_CHUNK scale; accelerators amortize the
+# chunk-prefix cumsum over wider lanes
+FALLBACK_CHUNK = {"cpu": SEG_CHUNK, "gpu": 64, "tpu": 128}
+
+# repo-relative location of the committed sweep (absent in installed
+# trees — the fallback table then applies)
+_SWEEP_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    *([os.pardir] * 4), "benchmarks", "BENCH_sparse.json",
+)
+
+
+def _sweep_table(path: str) -> dict[str, int]:
+    """backend -> best chunk from a committed sparse_vs_dense --chunks run.
+
+    The bench records per-density ``chunk_sweep_ms``; the winner is the
+    chunk with the lowest *total* time over all swept densities (one knob
+    serves every density, so optimize the sum, not a single row)."""
+
+    with open(path) as f:
+        data = json.load(f)
+    totals: dict[str, float] = {}
+    for row in data.get("rows", []):
+        for chunk, ms in row.get("chunk_sweep_ms", {}).items():
+            totals[chunk] = totals.get(chunk, 0.0) + float(ms)
+    if not totals:
+        return {}
+    return {data.get("backend", "cpu"): int(min(totals, key=totals.get))}
+
+
+@functools.lru_cache(maxsize=None)
+def _committed_sweep() -> dict[str, int]:
+    try:
+        return _sweep_table(_SWEEP_PATH)
+    except (OSError, ValueError, KeyError):
+        return {}
+
+
+def resolve_chunk(chunk: int | None, backend: str | None = None) -> int:
+    """The segment-reduce chunk to compile with.
+
+    ``chunk`` not None → returned unchanged.  Otherwise: the committed
+    sweep's winner for ``backend`` (default: the running jax backend),
+    else the hardcoded per-backend fallback, else ``SEG_CHUNK``."""
+
+    if chunk is not None:
+        return chunk
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    best = _committed_sweep().get(backend)
+    if best is not None:
+        return best
+    return FALLBACK_CHUNK.get(backend, SEG_CHUNK)

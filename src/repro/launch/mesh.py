@@ -1,14 +1,17 @@
-"""Production mesh construction.
+"""Production mesh construction — thin delegates over ``repro.mesh``.
 
-Functions, not module-level constants — importing this module never touches
-jax device state (the dry-run sets XLA_FLAGS before any jax init; tests
-import this under a 1-device runtime without side effects).
+Mesh geometry (axis shapes/names, block ownership, derived specs) is the
+``MeshPlan`` layer's job; this module only keeps the production-sized
+entry points and the ``MeshConfig`` bridge.  Functions, not module-level
+constants — importing this module never touches jax device state (the
+dry-run sets XLA_FLAGS before any jax init; tests import this under a
+1-device runtime without side effects).
 """
 
 from __future__ import annotations
 
-from repro.compat import make_mesh
 from repro.config import MeshConfig
+from repro.mesh.plan import MeshPlan, build_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,17 +19,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return make_mesh(shape, axes)
+    return build_mesh(shape, axes)
 
 
 def make_mesh_from_config(cfg: MeshConfig):
-    if cfg.multi_pod:
-        shape = (cfg.pod, cfg.data, cfg.model)
-        axes = ("pod", "data", "model")
-    else:
-        shape = (cfg.data, cfg.model)
-        axes = ("data", "model")
-    return make_mesh(shape, axes)
+    """The mesh of :func:`production_plan` (kept for callers that only
+    need the raw Mesh)."""
+
+    return production_plan(cfg).mesh
+
+
+def production_plan(cfg: MeshConfig, p: int | None = None,
+                    q: int | None = None) -> MeshPlan:
+    """Mesh + ownership plan for a ``MeshConfig`` — what the MC data
+    plane consumes (``CompletionProblem.from_entries(mesh=...)``,
+    ``Gossip(plan=...)``, ``RecommendService(plan=...)``)."""
+
+    return MeshPlan.from_mesh_config(cfg, p=p, q=q)
 
 
 def single_pod_config(**kw) -> MeshConfig:

@@ -35,9 +35,11 @@ from repro.mc.schedules import (
     make_schedule,
 )
 from repro.mc.trainer import FitResult, Trainer
+from repro.mesh.plan import MeshPlan
 from repro.sparse.entries import BlockEntries
 
 __all__ = [
+    "MeshPlan",
     "BenchLogger",
     "BlockEntries",
     "Callback",

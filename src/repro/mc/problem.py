@@ -34,6 +34,7 @@ from repro.core import objective as core_obj
 from repro.core import waves as core_waves
 from repro.core.state import Problem, State, make_problem
 from repro.data.synthetic import MCDataset
+from repro.mesh.plan import MeshPlan
 from repro import sparse as sparse_mod
 from repro.sparse.store import SparseProblem
 
@@ -49,8 +50,11 @@ class EngineOptions:
 
     use_kernel : run the Pallas kernels (auto-interpret off-TPU)
     method     : "segment" (sorted CSR/CSC streaming, default) | "scatter"
-    chunk      : segment-reduce chunk size; None = kernels' SEG_CHUNK.
-                 Swept by ``benchmarks/sparse_vs_dense.py --chunks``.
+    chunk      : segment-reduce chunk size; None auto-picks per backend
+                 from the committed ``--chunks`` sweep results
+                 (``kernels/sddmm/autotune.resolve_chunk``, fed by
+                 ``benchmarks/sparse_vs_dense.py --chunks``), with a sane
+                 hardcoded fallback.  An explicit chunk always wins.
     bucket     : padded-COO capacity quantum for sparse ingest
     headroom   : per-block append slack pre-allocated at sparse ingest, so
                  ``CompletionProblem.append`` splices streaming entries in
@@ -78,6 +82,19 @@ class EngineOptions:
             )
 
 
+def _place(data, p: int, q: int, mesh):
+    """Resolve a ``mesh=`` knob (Mesh | MeshPlan | None) into
+    (plan, device-placed data) — the single ingest-side placement hook."""
+
+    if mesh is None:
+        return None, data
+    plan = MeshPlan.build(p, q, mesh=mesh)
+    if isinstance(data, SparseProblem):
+        return plan, plan.place_entries(data)
+    g = plan.grid_spec
+    return plan, plan.place(data, Problem(g, g))
+
+
 @dataclasses.dataclass(frozen=True)
 class CompletionProblem:
     """Immutable bundle of blockified data + grid spec + engine options.
@@ -97,6 +114,7 @@ class CompletionProblem:
     seen_coo: Optional[Tuple[np.ndarray, np.ndarray]] = None
     mu: float = 0.0
     dataset: Optional[MCDataset] = None
+    plan: Optional[MeshPlan] = None
 
     # ------------------------------------------------------------------ #
     # constructors
@@ -116,12 +134,17 @@ class CompletionProblem:
         mean_center: bool = False,
         dataset: MCDataset | None = None,
         headroom: int | None = None,
+        mesh=None,
     ) -> "CompletionProblem":
         """From a dense (m, n) matrix + 0/1 observation mask.  Pads to the
         grid, blockifies, and converts to the sparse store when
         ``layout="sparse"``.  ``headroom`` pre-allocates per-block append
         slack in the sparse store for :meth:`append` (streaming
-        ingestion); it overrides ``engine.headroom``."""
+        ingestion); it overrides ``engine.headroom``.  ``mesh`` (a jax
+        Mesh or a ``repro.mesh.MeshPlan``) places the data onto its
+        owning devices at construction — the ``Gossip`` schedule,
+        streaming appends, and sharded serving then consume the
+        device-resident shards directly."""
 
         if layout not in ("dense", "sparse"):
             raise ValueError(
@@ -149,11 +172,12 @@ class CompletionProblem:
         if layout == "sparse":
             data = sparse_mod.from_blocks(dense.xb, dense.maskb,
                                           engine.bucket, engine.headroom)
+        plan, data = _place(data, p, q, mesh)
         rows, cols = np.nonzero(mask)
         return cls(data=data, spec=spec, engine=engine, num_users=m0,
                    num_items=n0, seen_coo=(rows.astype(np.int64),
                                            cols.astype(np.int64)),
-                   mu=mu, dataset=dataset)
+                   mu=mu, dataset=dataset, plan=plan)
 
     @classmethod
     def from_entries(
@@ -171,12 +195,17 @@ class CompletionProblem:
         mean_center: bool = False,
         dataset: MCDataset | None = None,
         headroom: int | None = None,
+        mesh=None,
     ) -> "CompletionProblem":
         """From a global COO triplet list — the streaming-ingestion path.
         ``layout="sparse"`` (default) never materializes the dense matrix;
         ``layout="dense"`` scatters into dense tensors first.  ``headroom``
         pre-allocates per-block append slack so :meth:`append` can splice
-        future ratings in place (overrides ``engine.headroom``)."""
+        future ratings in place (overrides ``engine.headroom``).  With a
+        ``mesh`` (Mesh or ``MeshPlan``) the sparse ingest is
+        **owner-routed**: each triplet goes straight to the device owning
+        its block and every device packs its own buckets — no globally
+        sorted COO is ever materialized (``sparse.ShardedEntries``)."""
 
         engine = engine or EngineOptions()
         if headroom is not None:
@@ -193,20 +222,31 @@ class CompletionProblem:
             mask[rows, cols] = 1.0
             return cls.from_dense(x, mask, p, q, rank, layout="dense",
                                   engine=engine, mean_center=mean_center,
-                                  dataset=dataset)
+                                  dataset=dataset, mesh=mesh)
         if layout != "sparse":
             raise ValueError(
                 f"unknown layout {layout!r}; expected 'dense' or 'sparse'"
             )
-        sp, (m, n) = sparse_mod.from_entries(
-            rows, cols, vals - mu if mu else vals, m0, n0, p, q,
-            engine.bucket, engine.headroom,
-        )
+        cvals = vals - mu if mu else vals
+        plan = MeshPlan.build(p, q, mesh=mesh) if mesh is not None else None
+        if plan is not None:
+            from repro.sparse.sharded import ShardedEntries
+
+            sharded, (m, n) = ShardedEntries.from_coo(
+                rows, cols, cvals, m0, n0, plan,
+                engine.bucket, engine.headroom,
+            )
+            sp = sharded.sp
+        else:
+            sp, (m, n) = sparse_mod.from_entries(
+                rows, cols, cvals, m0, n0, p, q,
+                engine.bucket, engine.headroom,
+            )
         spec = G.GridSpec(m, n, p, q, rank)
         order = np.argsort(rows, kind="stable")   # seen table wants user-sorted
         return cls(data=sp, spec=spec, engine=engine, num_users=m0,
                    num_items=n0, seen_coo=(rows[order], cols[order]),
-                   mu=mu, dataset=dataset)
+                   mu=mu, dataset=dataset, plan=plan)
 
     @classmethod
     def from_dataset(
@@ -220,15 +260,18 @@ class CompletionProblem:
         engine: EngineOptions | None = None,
         mean_center: bool = False,
         headroom: int | None = None,
+        mesh=None,
     ) -> "CompletionProblem":
         """From an ``MCDataset`` (synthetic low-rank, MovieLens proxy, or a
         loaded ratings file); keeps the held-out test split attached for
         eval-RMSE callbacks and ``FitResult.rmse()``.  ``headroom``
-        pre-allocates append slack for streaming :meth:`append`."""
+        pre-allocates append slack for streaming :meth:`append`;
+        ``mesh`` places the blocks onto their owners (see
+        :meth:`from_dense`)."""
 
         return cls.from_dense(ds.x, ds.train_mask, p, q, rank, layout=layout,
                               engine=engine, mean_center=mean_center,
-                              dataset=ds, headroom=headroom)
+                              dataset=ds, headroom=headroom, mesh=mesh)
 
     # ------------------------------------------------------------------ #
     # derived views
@@ -252,6 +295,16 @@ class CompletionProblem:
             self, engine=dataclasses.replace(self.engine, **overrides)
         )
 
+    def with_mesh(self, mesh) -> "CompletionProblem":
+        """Copy placed onto a mesh: builds the ``MeshPlan`` for this grid
+        and device_puts the data onto its owners.  ``mesh=None`` drops the
+        plan (data stays wherever it is)."""
+
+        if mesh is None:
+            return dataclasses.replace(self, plan=None)
+        plan, data = _place(self.data, self.spec.p, self.spec.q, mesh)
+        return dataclasses.replace(self, data=data, plan=plan)
+
     def with_layout(self, layout: str) -> "CompletionProblem":
         """Copy converted to the requested layout (no-op when it matches)."""
 
@@ -270,6 +323,8 @@ class CompletionProblem:
             raise ValueError(
                 f"unknown layout {layout!r}; expected 'dense' or 'sparse'"
             )
+        if self.plan is not None:      # keep the converted data on its owners
+            _, data = _place(data, self.spec.p, self.spec.q, self.plan)
         return dataclasses.replace(self, data=data)
 
     # ------------------------------------------------------------------ #
@@ -321,9 +376,18 @@ class CompletionProblem:
         )
         cvals = vals - self.mu if self.mu else vals
         if isinstance(self.data, SparseProblem):
-            data: Union[Problem, SparseProblem] = sparse_mod.append_entries(
-                self.data, rows, cols, cvals
-            )
+            if self.plan is not None:
+                # owner-routed: each entry goes to the device holding its
+                # block; untouched shards are reused, nothing is gathered
+                from repro.sparse.sharded import ShardedEntries
+
+                data: Union[Problem, SparseProblem] = ShardedEntries(
+                    self.data, self.plan
+                ).append(rows, cols, cvals).sp
+            else:
+                data = sparse_mod.append_entries(
+                    self.data, rows, cols, cvals
+                )
         else:
             mb, nb = self.spec.mb, self.spec.nb
             bi, rr = rows // mb, rows % mb
@@ -332,6 +396,8 @@ class CompletionProblem:
                 self.data.xb.at[bi, bj, rr, cc].set(jax.numpy.asarray(cvals)),
                 self.data.maskb.at[bi, bj, rr, cc].set(1.0),
             )
+            if self.plan is not None:
+                _, data = _place(data, self.spec.p, self.spec.q, self.plan)
         if self.seen_coo is not None:
             ar = np.concatenate([np.asarray(self.seen_coo[0], np.int64), rows])
             ac = np.concatenate([np.asarray(self.seen_coo[1], np.int64), cols])

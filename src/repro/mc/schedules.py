@@ -125,9 +125,15 @@ class Gossip(Schedule):
     """Distributed full-GD rounds over a device mesh: shard_map tiles the
     (p, q) block grid, factor edges travel by ``ppermute`` (one ICI hop),
     bounded staleness and optional int8/top-k message compression ride on
-    the halo exchange.  ``mesh=None`` builds a 1×1 mesh on the default
-    device — the single-host degenerate case, numerically identical to
-    ``FullGD`` (parity-tested).
+    the halo exchange.
+
+    Placement comes from one ``MeshPlan`` (priority: ``plan=`` on the
+    schedule, then ``mesh=`` + ``row_axes``/``col_axes``, then the
+    problem's own ``CompletionProblem.plan``, else a 1×1 single-device
+    plan — the degenerate case, numerically identical to ``FullGD``,
+    parity-tested).  A problem built with ``mesh=`` is already placed on
+    its owners, so the jitted step consumes the shards with no input
+    resharding.
 
     Checkpoint resume restores factors only; with ``staleness == 1`` and no
     compression the halos are rebuilt on the first resumed round, so resume
@@ -138,6 +144,7 @@ class Gossip(Schedule):
     num_rounds: int = 200
     eval_every: int = 0
     mesh: Any = None
+    plan: Any = None
     row_axes: Any = "data"
     col_axes: Any = "model"
     staleness: int = 1
@@ -147,16 +154,24 @@ class Gossip(Schedule):
     name = "gossip"
     units = "rounds"
 
-    def _mesh(self):
-        if self.mesh is not None:
-            return self.mesh
-        from repro.compat import make_mesh
+    def _plan(self, problem):
+        from repro.mesh.plan import MeshPlan
 
-        return make_mesh((1, 1), ("data", "model"))
+        p, q = problem.spec.p, problem.spec.q
+        if self.plan is not None:
+            return MeshPlan.build(p, q, mesh=self.plan)
+        if self.mesh is not None:
+            return MeshPlan.build(p, q, mesh=self.mesh,
+                                  row_axes=self.row_axes,
+                                  col_axes=self.col_axes)
+        if getattr(problem, "plan", None) is not None:
+            return problem.plan
+        return MeshPlan.build(p, q, row_axes=self.row_axes,
+                              col_axes=self.col_axes)
 
     def run(self, problem, cfg, key, *, state=None, done=0, eval_cb=None):
         eng = problem.engine
-        mesh = self._mesh()
+        plan = self._plan(problem)
         if state is None:
             key, ik = jax.random.split(key)
             state = init_state(ik, problem.spec)
@@ -167,8 +182,7 @@ class Gossip(Schedule):
         def step_for(n: int):
             if n not in steps:
                 steps[n], _ = core_gossip.make_gossip_step(
-                    mesh, (problem.spec.p, problem.spec.q), cfg,
-                    row_axes=self.row_axes, col_axes=self.col_axes,
+                    None, (problem.spec.p, problem.spec.q), cfg, plan=plan,
                     staleness=self.staleness, compression=self.compression,
                     topk_fraction=self.topk_fraction,
                     use_kernel=eng.use_kernel, steps_per_call=n,
@@ -183,8 +197,7 @@ class Gossip(Schedule):
             carry = step_for(n)(problem.data, carry)
             rd += n
             cost = float(core_gossip.distributed_cost(
-                mesh, problem.data, carry.state, cfg.lam,
-                row_axes=self.row_axes, col_axes=self.col_axes,
+                None, problem.data, carry.state, cfg.lam, plan=plan,
             ))
             history.append((int(carry.state.t), cost))
             if eval_cb:

@@ -106,11 +106,20 @@ class FitResult:
         )
 
     def to_service(self, batch: int = 256, k: int = 10,
-                   exclude_seen: bool = True) -> RecommendService:
-        """Fixed-batch top-k serving front end over the trained factors."""
+                   exclude_seen: bool = True, plan=None) -> RecommendService:
+        """Fixed-batch top-k serving front end over the trained factors.
 
+        ``plan`` (a ``repro.mesh.MeshPlan``; defaults to the problem's own
+        plan when it spans multiple devices) shards the catalog's item
+        axis over the plan's devices with the two-stage top-k query —
+        serving for catalogs larger than one device."""
+
+        if plan is None:
+            pp = getattr(self.problem, "plan", None)
+            if pp is not None and not pp.is_single_device:
+                plan = pp
         return RecommendService(self.to_recommend_index(), batch=batch, k=k,
-                                exclude_seen=exclude_seen)
+                                exclude_seen=exclude_seen, plan=plan)
 
 
 class Trainer:

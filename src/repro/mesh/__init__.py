@@ -1,0 +1,24 @@
+"""``repro.mesh`` — mesh-native data-plane placement.
+
+One object (:class:`MeshPlan`) answers every placement question: which
+device owns block (i, j), how the entry store / factor stacks / serving
+item axis shard, and how to build the mesh itself.  The sparse store,
+the minibatch stream, the gossip schedule, and the recommend index all
+consume it instead of hand-rolling PartitionSpecs.
+"""
+
+from repro.mesh.plan import (
+    MeshPlan,
+    axis_if_divisible,
+    build_mesh,
+    divides,
+    dp_axes,
+)
+
+__all__ = [
+    "MeshPlan",
+    "axis_if_divisible",
+    "build_mesh",
+    "divides",
+    "dp_axes",
+]

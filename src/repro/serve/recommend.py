@@ -16,18 +16,30 @@ jit cache entry) — the shape discipline that a production front-end needs —
 and ``refresh(fit_result)`` hot-swaps the index after a streaming
 ``Trainer.refit`` without touching the serving loop (DESIGN.md §11).
 
-Throughput bench: ``benchmarks/serve_recommend.py``.
+**Catalogs bigger than one device** (`shard_index` + a ``MeshPlan``): the
+item axis of W is sharded over every mesh device and top-k runs in two
+stages — each shard k-selects over its own n/S items (seen-exclusion
+applied shard-locally on the global ids that fall in its range), then the
+S·k candidates are all-gathered and merged by one final k-selection.  The
+merge is exact (the global top-k is always a subset of the per-shard
+top-k's), pinned against the numpy oracle in ``tests/test_mesh_plan.py``.
+
+Throughput bench: ``benchmarks/serve_recommend.py`` (``--sharded``).
 """
 
 from __future__ import annotations
 
+import dataclasses
+import functools
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.assemble import assemble
 from repro.core.grid import GridSpec
 
@@ -53,10 +65,10 @@ class RecommendIndex(NamedTuple):
         new = fit_result.to_recommend_index()
         if new.u.shape != self.u.shape or new.w.shape != self.w.shape:
             raise ValueError(
-                f"refresh changes the factor shapes: index serves "
-                f"{self.u.shape[0]} users x {self.w.shape[0]} items, fit has "
-                f"{new.u.shape[0]} x {new.w.shape[0]}; a re-shaped problem "
-                f"needs a new build_index, not a refresh"
+                f"refresh changes the factor shapes: expected "
+                f"u{tuple(self.u.shape)} x w{tuple(self.w.shape)}, got "
+                f"u{tuple(new.u.shape)} x w{tuple(new.w.shape)}; a "
+                f"re-shaped problem needs a new build_index, not a refresh"
             )
         return new
 
@@ -158,32 +170,214 @@ def score_pairs(index: RecommendIndex, user_ids, item_ids):
     return jnp.sum(index.u[user_ids] * index.w[item_ids], axis=-1)
 
 
+# ---------------------------------------------------------------------- #
+# item-axis-sharded serving: per-shard k-select + exact merge
+# ---------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedRecommendIndex:
+    """A ``RecommendIndex`` whose item axis lives across the mesh.
+
+    ``index.w`` is padded to a multiple of the plan's device count and
+    device_put with ``plan.item_spec`` — every device holds exactly
+    ``shard_items`` item factors, so catalogs scale past one device's
+    memory.  ``u``/``seen`` stay replicated (user batches are small;
+    queries gather by user id).  ``num_items`` is the true catalog size;
+    padding rows are masked inside the sharded query."""
+
+    index: RecommendIndex
+    plan: object                 # repro.mesh.MeshPlan
+    num_items: int
+
+    @property
+    def num_item_shards(self) -> int:
+        return self.plan.num_item_shards
+
+    @property
+    def shard_items(self) -> int:
+        """Items held per device (padded width / shard count)."""
+
+        return self.index.w.shape[0] // self.plan.num_item_shards
+
+    def refresh(self, fit_result) -> "ShardedRecommendIndex":
+        """Hot-swap after a (re)fit, keeping the shard layout.
+
+        Guards the sharded contract on top of the factor-shape guard: the
+        refreshed fit must produce the same item-shard geometry this index
+        was built with — a fit carrying a ``MeshPlan`` with a different
+        device count would re-partition the catalog mid-serve, which the
+        compiled two-stage query cannot absorb."""
+
+        fit_plan = getattr(getattr(fit_result, "problem", None), "plan", None)
+        if fit_plan is not None and \
+                fit_plan.num_item_shards != self.num_item_shards:
+            raise ValueError(
+                f"refresh changes the item-shard count: this index serves "
+                f"{self.num_items} items over {self.num_item_shards} shards "
+                f"({self.shard_items} items/shard), the refit's MeshPlan has "
+                f"{fit_plan.num_item_shards} shards; rebuild the serving "
+                f"side with shard_index(new_index, new_plan) / "
+                f"RecommendService(index, plan=new_plan) instead of refresh"
+            )
+        new = fit_result.to_recommend_index()
+        old = _unpad_index(self)
+        if new.u.shape != old.u.shape or new.w.shape != old.w.shape:
+            raise ValueError(
+                f"refresh changes the factor shapes: expected "
+                f"u{tuple(old.u.shape)} x w{tuple(old.w.shape)}, got "
+                f"u{tuple(new.u.shape)} x w{tuple(new.w.shape)}; a "
+                f"re-shaped problem needs a new shard_index, not a refresh"
+            )
+        return shard_index(new, self.plan)
+
+
+def _unpad_index(sidx: ShardedRecommendIndex) -> RecommendIndex:
+    return RecommendIndex(sidx.index.u, sidx.index.w[: sidx.num_items],
+                          sidx.index.seen)
+
+
+def shard_index(index: RecommendIndex, plan) -> ShardedRecommendIndex:
+    """Partition an index's item axis over every device of ``plan``.
+
+    W is zero-padded to a shard multiple (padding masked at query time)
+    and placed with ``plan.item_spec``; u and the seen table replicate.
+    A 1-device plan degrades to the unsharded layout (and the two-stage
+    query to a plain ``recommend_topk`` — parity-tested)."""
+
+    S = plan.num_item_shards
+    n, r = index.w.shape
+    n_pad = -(-n // S) * S
+    w = index.w
+    if n_pad != n:
+        w = jnp.concatenate(
+            [w, jnp.zeros((n_pad - n, r), w.dtype)], axis=0
+        )
+    w = jax.device_put(w, plan.sharding(plan.item_spec))
+    rep = plan.sharding(P())
+    u = jax.device_put(index.u, rep)
+    seen = jax.device_put(index.seen, rep)
+    return ShardedRecommendIndex(RecommendIndex(u, w, seen), plan, n)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_sharded_topk(plan, k: int, exclude_seen: bool, num_items: int,
+                       shard_items: int):
+    """Compiled two-stage query for one (plan, k) shape."""
+
+    axes = plan.all_axes
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def body(u, w_local, seen, user_ids):
+        start = jax.lax.axis_index(ax) * shard_items
+        scores = u[user_ids] @ w_local.T                     # (B, ln)
+        local_ids = start + jnp.arange(shard_items)
+        scores = jnp.where(local_ids[None, :] < num_items, scores, -jnp.inf)
+        if exclude_seen:
+            b = user_ids.shape[0]
+            seen_l = seen[user_ids] - start                  # (B, S_seen)
+            seen_l = jnp.where(
+                (seen_l >= 0) & (seen_l < shard_items), seen_l, shard_items
+            )
+            scores = scores.at[jnp.arange(b)[:, None], seen_l].set(
+                -jnp.inf, mode="drop"
+            )
+        sc, idx = jax.lax.top_k(scores, k)                   # stage 1: local
+        ids = start + idx
+        all_sc = jax.lax.all_gather(sc, ax, axis=1, tiled=True)   # (B, S·k)
+        all_ids = jax.lax.all_gather(ids, ax, axis=1, tiled=True)
+        msc, mix = jax.lax.top_k(all_sc, k)                  # stage 2: merge
+        mids = jnp.take_along_axis(all_ids, mix, axis=1)
+        return mids, msc
+
+    return jax.jit(shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(P(), plan.item_spec, P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    ))
+
+
+def recommend_topk_sharded(
+    sidx: ShardedRecommendIndex, user_ids: jax.Array, *,
+    k: int, exclude_seen: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(items, scores) of shape (B, k) from the sharded index.
+
+    Stage 1 runs on every item shard in parallel (local matmul, local
+    seen-mask, local top-k over n/S items); stage 2 all-gathers the S·k
+    candidates and k-selects once.  Exact: any global top-k item is by
+    definition in its own shard's top-k."""
+
+    if k > sidx.shard_items:
+        raise ValueError(
+            f"k={k} exceeds the per-shard catalog slice "
+            f"{sidx.shard_items} (= {sidx.index.w.shape[0]} padded items / "
+            f"{sidx.num_item_shards} shards); shrink k or use fewer shards"
+        )
+    fn = _make_sharded_topk(sidx.plan, k, exclude_seen, sidx.num_items,
+                            sidx.shard_items)
+    return fn(sidx.index.u, sidx.index.w, sidx.index.seen, user_ids)
+
+
 class RecommendService:
     """Fixed-batch front end: chunk arbitrary user lists into ``batch``-sized
-    jitted calls (tail padded), so serving hits exactly one compiled shape."""
+    jitted calls (tail padded), so serving hits exactly one compiled shape.
+
+    Pass ``plan=`` (a ``repro.mesh.MeshPlan``) and the catalog's item axis
+    is sharded over every device of the plan with the two-stage top-k
+    query — the front-end contract (``recommend``, ``refresh``) is
+    unchanged.  A sharded service holds the catalog **only** as its
+    per-device shards (``self.index`` is ``None``): retaining the
+    unsharded copy would pin the full n×r factor matrix on one device,
+    which is exactly what ``plan=`` exists to avoid."""
 
     def __init__(self, index: RecommendIndex, batch: int = 256, k: int = 10,
-                 exclude_seen: bool = True):
-        self.index = index
+                 exclude_seen: bool = True, plan=None):
         self.batch = batch
         self.k = k
         self.exclude_seen = exclude_seen
+        self.plan = plan
+        if plan is not None:
+            self._sharded = shard_index(index, plan)
+            self.index = None     # catalog lives only as device shards
+        else:
+            self._sharded = None
+            self.index = index
 
     @property
     def num_users(self) -> int:
+        if self._sharded is not None:
+            return self._sharded.index.u.shape[0]
         return self.index.u.shape[0]
 
     @property
     def num_items(self) -> int:
+        if self._sharded is not None:
+            return self._sharded.num_items
         return self.index.w.shape[0]
+
+    @property
+    def num_item_shards(self) -> int:
+        """Devices the catalog is partitioned over (1 when unsharded)."""
+
+        return self._sharded.num_item_shards if self._sharded else 1
 
     def refresh(self, fit_result) -> "RecommendService":
         """Hot-swap the index from a (re)fit: same batch/k/jit cache, new
         factors + seen table.  In-flight ``recommend`` calls are unaffected
         (the old index is immutable); the next call serves the refresh.
-        Returns ``self`` for chaining."""
+        On a sharded service the refit must keep the item-shard geometry
+        (``ShardedRecommendIndex.refresh`` validates and raises with the
+        expected-vs-got shard counts otherwise).  Returns ``self`` for
+        chaining."""
 
-        self.index = self.index.refresh(fit_result)
+        if self._sharded is not None:
+            # one index rebuild: ShardedRecommendIndex.refresh guards the
+            # shard geometry and the factor shapes before swapping
+            self._sharded = self._sharded.refresh(fit_result)
+        else:
+            self.index = self.index.refresh(fit_result)
         return self
 
     def recommend(self, user_ids) -> tuple[np.ndarray, np.ndarray]:
@@ -193,16 +387,25 @@ class RecommendService:
         n = len(user_ids)
         out_items = np.empty((n, self.k), np.int32)
         out_scores = np.empty((n, self.k), np.float32)
-        index = self.index      # snapshot: a concurrent refresh never mixes
+        # snapshot whichever backend is live: a concurrent refresh never
+        # mixes universes within one call
+        index = self.index
+        sharded = self._sharded
         for s in range(0, n, self.batch):           # universes within a call
             chunk = user_ids[s : s + self.batch]
             pad = self.batch - len(chunk)
             if pad:
                 chunk = np.pad(chunk, (0, pad))
-            items, scores = recommend_topk(
-                index, jnp.asarray(chunk),
-                k=self.k, exclude_seen=self.exclude_seen,
-            )
+            if sharded is not None:
+                items, scores = recommend_topk_sharded(
+                    sharded, jnp.asarray(chunk),
+                    k=self.k, exclude_seen=self.exclude_seen,
+                )
+            else:
+                items, scores = recommend_topk(
+                    index, jnp.asarray(chunk),
+                    k=self.k, exclude_seen=self.exclude_seen,
+                )
             take = min(self.batch, n - s)
             out_items[s : s + take] = np.asarray(items)[:take]
             out_scores[s : s + take] = np.asarray(scores)[:take]

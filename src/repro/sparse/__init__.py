@@ -21,8 +21,16 @@ from repro.sparse.objective import (
     full_objective_sparse,
     total_report_cost_sparse,
 )
+from repro.sparse.sharded import (
+    ShardedEntries,
+    f_grads_sharded,
+    sample_minibatch_sharded,
+)
 
 __all__ = [
+    "ShardedEntries",
+    "f_grads_sharded",
+    "sample_minibatch_sharded",
     "BlockEntries",
     "DEFAULT_BUCKET",
     "MinibatchStream",

@@ -34,6 +34,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.sddmm import autotune as sddmm_autotune
 from repro.kernels.sddmm import ops as sddmm_ops
 from repro.kernels.sddmm import ref as sddmm_ref
 from repro.kernels.sddmm import segment as sddmm_seg
@@ -86,6 +87,9 @@ def f_grads_sparse(entries, u, w, *legacy, use_kernel: bool = False,
         return sddmm_ref.sddmm_factor_grad_ref(entries, u, w)
     if method != "segment":
         raise ValueError(f"unknown method {method!r}; 'segment' or 'scatter'")
+    # chunk=None -> the committed --chunks sweep's winner for this backend
+    # (kernels/sddmm/autotune.py); an explicit chunk always wins
+    chunk = sddmm_autotune.resolve_chunk(chunk)
     if use_kernel:
         return sddmm_ops.sddmm_segment_grad(entries, u, w, chunk=chunk)
     return sddmm_seg.sddmm_segment_grad_ref(entries, u, w, chunk=chunk)

@@ -35,13 +35,17 @@ into the (row, col) sorted order inside the existing capacity, and the
 no full re-sort, no shape change, so every jitted consumer keeps its
 compiled executable (DESIGN.md §11).  The leading (p, q) axes shard exactly
 like the dense tensors (P(row_axes, col_axes)), so the distributed gossip
-step reuses its halo protocol unchanged.  ``SparseProblem.pspec`` is the
-one place that knows the pytree structure for shard_map specs — adding a
-field updates this module, never the schedulers.
+step reuses its halo protocol unchanged.  Placement — which device owns
+block (i, j) and the shard specs of every leaf — is answered by
+``repro.mesh.MeshPlan`` (``SparseProblem.pspec`` is a back-compat thin
+delegate); the device-owned view lives in ``sparse/sharded.py``
+(``ShardedEntries``: per-device packing, owner-routed appends, per-shard
+minibatch sampling).
 """
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -122,12 +126,13 @@ class SparseProblem(NamedTuple):
     @classmethod
     def pspec(cls, spec2) -> "SparseProblem":
         """Matching pytree of PartitionSpecs: every leaf shards on its
-        leading (p, q) axes.  The single source of truth for shard_map
-        in_specs — schedulers call this instead of spelling out fields."""
+        leading (p, q) axes.  Thin back-compat delegate —
+        ``repro.mesh.MeshPlan`` is the single source of placement truth;
+        prefer ``plan.entries_spec()``."""
 
-        return cls(
-            BlockEntries(*([spec2] * len(BlockEntries._fields))), spec2
-        )
+        from repro.mesh.plan import entries_spec_like  # local: avoid cycle
+
+        return entries_spec_like(spec2)
 
 
 def bucketed_capacity(max_nnz: int, bucket: int = DEFAULT_BUCKET,
@@ -145,14 +150,25 @@ def bucketed_capacity(max_nnz: int, bucket: int = DEFAULT_BUCKET,
 
 
 def _pack_sorted(blk, rr, cc, vv, p, q, mb, nb, bucket,
-                 headroom: int = 0) -> SparseProblem:
+                 headroom: int = 0,
+                 capacity: int | None = None) -> SparseProblem:
     """Shared packing tail: (block, row, col)-lexicographically sorted entry
     streams -> the padded, segment-sorted store.  ``blk`` must be
-    non-decreasing with (rr, cc) lexicographic within each block."""
+    non-decreasing with (rr, cc) lexicographic within each block.
+    ``capacity`` forces the per-block capacity E — the sharded ingest path
+    (``sparse/sharded.py``) packs each device's blocks independently but
+    must agree on one global E."""
 
     total = len(blk)
     nnz = np.bincount(blk, minlength=p * q).astype(np.int64)
-    E = bucketed_capacity(int(nnz.max()) if total else 0, bucket, headroom)
+    E = (capacity if capacity is not None
+         else bucketed_capacity(int(nnz.max()) if total else 0, bucket,
+                                headroom))
+    if int(nnz.max() if total else 0) > E:
+        raise ValueError(
+            f"forced capacity {E} below the largest block nnz "
+            f"{int(nnz.max())}"
+        )
     starts = np.zeros(p * q + 1, np.int64)
     np.cumsum(nnz, out=starts[1:])
     within = np.arange(total, dtype=np.int64) - starts[blk]
@@ -316,6 +332,82 @@ def dedupe_last_write(rows, cols, vals, stride: int):
     return rows[order], cols[order], vals[order]
 
 
+def _splice_block(ent, rptr, cptr, nnz, b, nrr, ncc, nvv, mb, nb, E,
+                  label: str):
+    """Splice one block's new entries into its sorted prefix, in place.
+
+    ``ent`` maps field name -> (nblocks, E) arrays; ``rptr``/``cptr``/
+    ``nnz`` are the matching flattened offset/count arrays; ``b`` is the
+    flat block index *within those arrays*.  ``label`` names the block in
+    overflow errors (global (i, j) coords — the sharded append passes the
+    global label even though its arrays are device-local).  This is the
+    single definition of the sorted-splice merge, shared by the global
+    :func:`append_entries` and the owner-routed ``ShardedEntries.append``.
+    """
+
+    k = int(nnz[b])
+    # new entries in the block's (row, col) lexicographic key order
+    nkey = nrr * nb + ncc
+    ks = np.argsort(nkey)
+    nkey = nkey[ks]
+    nrr, ncc = nrr[ks], ncc[ks]
+    nvv = nvv[ks]
+    ekey = ent["rows"][b, :k].astype(np.int64) * nb + ent["cols"][b, :k]
+    idx = np.searchsorted(ekey, nkey)
+    if k:
+        dup = (idx < k) & (ekey[np.minimum(idx, k - 1)] == nkey)
+    else:
+        dup = np.zeros(len(nkey), bool)
+    if dup.any():                        # edited ratings: value-only patch
+        ent["vals"][b, idx[dup]] = nvv[dup]
+    ins = ~dup
+    n_ins = int(ins.sum())
+    if n_ins == 0:
+        return
+    k2 = k + n_ins
+    if k2 > E:
+        raise ValueError(
+            f"append overflows block {label}: {k} stored + {n_ins} new "
+            f"entries > capacity {E}; re-ingest with headroom>={k2 - E} "
+            f"more than before (from_entries/from_dataset headroom=) or "
+            f"a larger bucket to pre-allocate append slack"
+        )
+    irr, icc, ivv = nrr[ins], ncc[ins], nvv[ins]
+    # the classic merge, by insertion index: old entry i shifts by the
+    # number of inserts landing at or before it, insert j lands at its
+    # searchsorted position plus the inserts already placed before it
+    pos = np.searchsorted(ekey, nkey[ins])
+    old_dest = np.arange(k) + np.searchsorted(pos, np.arange(k), "right")
+    ins_dest = pos + np.arange(n_ins)
+    # CSC keys of the old prefix, in CSC order — before the splice below
+    old_perm = ent["col_perm"][b, :k]
+    ckey_sorted = (ent["cols"][b, :k].astype(np.int64) * mb
+                   + ent["rows"][b, :k])[old_perm]
+    for f, new in (("rows", irr), ("cols", icc), ("vals", ivv)):
+        merged = np.empty(k2, ent[f].dtype)
+        merged[old_dest] = ent[f][b, :k]
+        merged[ins_dest] = new
+        ent[f][b, :k2] = merged
+    ent["valid"][b, :k2] = 1.0
+    # patch the segment offsets with cumulated per-row/col insert counts
+    rptr[b, 1:] += np.cumsum(np.bincount(irr, minlength=mb)).astype(
+        rptr.dtype)
+    cptr[b, 1:] += np.cumsum(np.bincount(icc, minlength=nb)).astype(
+        cptr.dtype)
+    # same merge in the (col, row) dual order re-threads col_perm: old
+    # CSC slots shift by the inserts sorting before them and map to the
+    # spliced CSR positions of the entries they pointed at
+    corder = np.argsort(icc * mb + irr)
+    cpos = np.searchsorted(ckey_sorted, (icc * mb + irr)[corder])
+    perm2 = np.empty(k2, np.int32)
+    t = np.arange(k)
+    perm2[t + np.searchsorted(cpos, t, "right")] = old_dest[old_perm]
+    perm2[cpos + np.arange(n_ins)] = ins_dest[corder]
+    ent["col_perm"][b, :k2] = perm2
+    ent["col_perm"][b, k2:] = np.arange(k2, E)   # padding -> itself
+    nnz[b] = k2
+
+
 def append_entries(
     sp: SparseProblem,
     rows: np.ndarray,
@@ -380,68 +472,9 @@ def append_entries(
 
     for b in np.unique(blk):
         sel = blk == b
-        k = int(nnz[b])
-        # new entries in the block's (row, col) lexicographic key order
-        nkey = rr[sel] * nb + cc[sel]
-        ks = np.argsort(nkey)
-        nkey = nkey[ks]
-        nrr, ncc = rr[sel][ks], cc[sel][ks]
-        nvv = vals[sel][ks]
-        ekey = ent["rows"][b, :k].astype(np.int64) * nb + ent["cols"][b, :k]
-        idx = np.searchsorted(ekey, nkey)
-        if k:
-            dup = (idx < k) & (ekey[np.minimum(idx, k - 1)] == nkey)
-        else:
-            dup = np.zeros(len(nkey), bool)
-        if dup.any():                        # edited ratings: value-only patch
-            ent["vals"][b, idx[dup]] = nvv[dup]
-        ins = ~dup
-        n_ins = int(ins.sum())
-        if n_ins == 0:
-            continue
-        k2 = k + n_ins
-        if k2 > E:
-            i, j = divmod(int(b), q)
-            raise ValueError(
-                f"append overflows block ({i},{j}): {k} stored + {n_ins} new "
-                f"entries > capacity {E}; re-ingest with headroom>={k2 - E} "
-                f"more than before (from_entries/from_dataset headroom=) or "
-                f"a larger bucket to pre-allocate append slack"
-            )
-        irr, icc, ivv = nrr[ins], ncc[ins], nvv[ins]
-        # the classic merge, by insertion index: old entry i shifts by the
-        # number of inserts landing at or before it, insert j lands at its
-        # searchsorted position plus the inserts already placed before it
-        pos = np.searchsorted(ekey, nkey[ins])
-        old_dest = np.arange(k) + np.searchsorted(pos, np.arange(k), "right")
-        ins_dest = pos + np.arange(n_ins)
-        # CSC keys of the old prefix, in CSC order — before the splice below
-        old_perm = ent["col_perm"][b, :k]
-        ckey_sorted = (ent["cols"][b, :k].astype(np.int64) * mb
-                       + ent["rows"][b, :k])[old_perm]
-        for f, new in (("rows", irr), ("cols", icc), ("vals", ivv)):
-            merged = np.empty(k2, ent[f].dtype)
-            merged[old_dest] = ent[f][b, :k]
-            merged[ins_dest] = new
-            ent[f][b, :k2] = merged
-        ent["valid"][b, :k2] = 1.0
-        # patch the segment offsets with cumulated per-row/col insert counts
-        rptr[b, 1:] += np.cumsum(np.bincount(irr, minlength=mb)).astype(
-            rptr.dtype)
-        cptr[b, 1:] += np.cumsum(np.bincount(icc, minlength=nb)).astype(
-            cptr.dtype)
-        # same merge in the (col, row) dual order re-threads col_perm: old
-        # CSC slots shift by the inserts sorting before them and map to the
-        # spliced CSR positions of the entries they pointed at
-        corder = np.argsort(icc * mb + irr)
-        cpos = np.searchsorted(ckey_sorted, (icc * mb + irr)[corder])
-        perm2 = np.empty(k2, np.int32)
-        t = np.arange(k)
-        perm2[t + np.searchsorted(cpos, t, "right")] = old_dest[old_perm]
-        perm2[cpos + np.arange(n_ins)] = ins_dest[corder]
-        ent["col_perm"][b, :k2] = perm2
-        ent["col_perm"][b, k2:] = np.arange(k2, E)   # padding -> itself
-        nnz[b] = k2
+        i, j = divmod(int(b), q)
+        _splice_block(ent, rptr, cptr, nnz, int(b), rr[sel], cc[sel],
+                      vals[sel], mb, nb, E, label=f"({i},{j})")
 
     entries = BlockEntries(
         jnp.asarray(ent["rows"].reshape(p, q, E)),
@@ -515,6 +548,43 @@ def ensure_layout(problem, layout: str | None, bucket: int = DEFAULT_BUCKET):
 # ---------------------------------------------------------------------------
 
 
+def _sample_block(k, rows, cols, vals, nnz, *, batch: int, mb: int, nb: int):
+    """One block's uniform with-replacement minibatch (the shared inner
+    sampler of :func:`sample_minibatch` and the mesh-aware per-shard path
+    in ``sparse/sharded.py``).  Sampled *positions* are sorted before
+    gathering so the batch inherits the store's row-sorted order and
+    carries fresh CSR/CSC offsets."""
+
+    idx = jax.random.randint(k, (batch,), 0, jnp.maximum(nnz, 1))
+    idx = jnp.sort(idx)                     # sorted positions -> sorted rows
+    ok = (nnz > 0).astype(jnp.float32)
+    r_ = jnp.take(rows, idx, indices_are_sorted=True, mode="clip")
+    c_ = jnp.take(cols, idx, indices_are_sorted=True, mode="clip")
+    v_ = jnp.take(vals, idx, indices_are_sorted=True, mode="clip")
+    rptr = jnp.searchsorted(r_, jnp.arange(mb + 1)).astype(jnp.int32)
+    perm = jnp.argsort(c_, stable=True).astype(jnp.int32)
+    cptr = jnp.searchsorted(
+        jnp.take(c_, perm, mode="clip"), jnp.arange(nb + 1)
+    ).astype(jnp.int32)
+    return r_, c_, v_, ok * jnp.ones((batch,), jnp.float32), perm, rptr, cptr
+
+
+def _assemble_batch(parts, p: int, q: int, batch: int, mb: int, nb: int,
+                    nnz) -> SparseProblem:
+    """Pack the vmapped per-block sampler outputs into a SparseProblem."""
+
+    rows, cols, vals, valid, perm, rptr, cptr = parts
+    shape = (p, q, batch)
+    entries = BlockEntries(
+        rows.reshape(shape), cols.reshape(shape), vals.reshape(shape),
+        valid.reshape(shape), perm.reshape(shape),
+        rptr.reshape(p, q, mb + 1), cptr.reshape(p, q, nb + 1),
+    )
+    return SparseProblem(
+        entries, jnp.where(nnz > 0, batch, 0).astype(jnp.int32)
+    )
+
+
 def sample_minibatch(key: jax.Array, sp: SparseProblem, batch: int) -> SparseProblem:
     """Uniform with-replacement sample of ``batch`` observed entries per block.
 
@@ -530,38 +600,16 @@ def sample_minibatch(key: jax.Array, sp: SparseProblem, batch: int) -> SparsePro
 
     p, q, _ = sp.rows.shape
     mb, nb = sp.mb, sp.nb
-
-    def one(k, rows, cols, vals, nnz):
-        idx = jax.random.randint(k, (batch,), 0, jnp.maximum(nnz, 1))
-        idx = jnp.sort(idx)                     # sorted positions -> sorted rows
-        ok = (nnz > 0).astype(jnp.float32)
-        r_ = jnp.take(rows, idx, indices_are_sorted=True, mode="clip")
-        c_ = jnp.take(cols, idx, indices_are_sorted=True, mode="clip")
-        v_ = jnp.take(vals, idx, indices_are_sorted=True, mode="clip")
-        rptr = jnp.searchsorted(r_, jnp.arange(mb + 1)).astype(jnp.int32)
-        perm = jnp.argsort(c_, stable=True).astype(jnp.int32)
-        cptr = jnp.searchsorted(
-            jnp.take(c_, perm, mode="clip"), jnp.arange(nb + 1)
-        ).astype(jnp.int32)
-        return r_, c_, v_, ok * jnp.ones((batch,), jnp.float32), perm, rptr, cptr
-
+    one = functools.partial(_sample_block, batch=batch, mb=mb, nb=nb)
     keys = jax.random.split(key, p * q)
-    rows, cols, vals, valid, perm, rptr, cptr = jax.vmap(one)(
+    parts = jax.vmap(one)(
         keys,
         sp.rows.reshape(p * q, -1),
         sp.cols.reshape(p * q, -1),
         sp.vals.reshape(p * q, -1),
         sp.nnz.reshape(p * q),
     )
-    shape = (p, q, batch)
-    entries = BlockEntries(
-        rows.reshape(shape), cols.reshape(shape), vals.reshape(shape),
-        valid.reshape(shape), perm.reshape(shape),
-        rptr.reshape(p, q, mb + 1), cptr.reshape(p, q, nb + 1),
-    )
-    return SparseProblem(
-        entries, jnp.where(sp.nnz > 0, batch, 0).astype(jnp.int32)
-    )
+    return _assemble_batch(parts, p, q, batch, mb, nb, sp.nnz)
 
 
 def minibatch_grad_scale(sp: SparseProblem, batch: int) -> jax.Array:
@@ -573,15 +621,36 @@ def minibatch_grad_scale(sp: SparseProblem, batch: int) -> jax.Array:
 class MinibatchStream:
     """Stateless (step -> minibatch) sampler, mirroring LMTokenPipeline's
     restart-exact contract: ``batch_at(step)`` is a pure function of
-    (seed, step), so checkpoint resume replays the identical entry stream."""
+    (seed, step), so checkpoint resume replays the identical entry stream.
 
-    def __init__(self, sp: SparseProblem, batch: int, seed: int = 0):
+    Mesh-aware mode: pass a ``repro.mesh.MeshPlan`` and the store is
+    placed onto its owners once, after which every ``batch_at`` samples
+    **per shard** under ``shard_map`` — each device draws only its own
+    blocks' entries from its local shard, with per-block keys derived by
+    ``fold_in(fold_in(seed_key, step), global_block_id)``.  Because the
+    key of block (i, j) depends only on (seed, step, i, j), the sampled
+    stream is identical for every mesh shape (host-count invariant) and
+    stays restart-exact; no host ever materializes another host's
+    entries.  ``plan=None`` keeps the original single-host sampler
+    bit-for-bit (split-based keys)."""
+
+    def __init__(self, sp: SparseProblem, batch: int, seed: int = 0,
+                 plan=None):
         self.sp = sp
         self.batch = batch
         self.seed = seed
+        self.plan = plan
         self._base = jax.random.PRNGKey(seed)
+        self._sharded = None
+        if plan is not None:
+            from repro.sparse.sharded import ShardedEntries  # avoid cycle
+
+            self._sharded = ShardedEntries.from_problem(sp, plan)
 
     def batch_at(self, step: int) -> SparseProblem:
-        return sample_minibatch(
-            jax.random.fold_in(self._base, step), self.sp, self.batch
-        )
+        key = jax.random.fold_in(self._base, step)
+        if self._sharded is not None:
+            from repro.sparse.sharded import sample_minibatch_sharded
+
+            return sample_minibatch_sharded(key, self._sharded, self.batch)
+        return sample_minibatch(key, self.sp, self.batch)

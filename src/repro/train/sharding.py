@@ -27,13 +27,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import MeshConfig, ModelConfig, ShapeConfig
 
-
-def dp_axes(mesh_cfg: MeshConfig):
-    return ("pod", "data") if mesh_cfg.multi_pod else ("data",)
-
-
-def _div(n: int, by: int) -> bool:
-    return by > 0 and n % by == 0
+# placement primitives live with the MeshPlan layer (repro.mesh):
+# dp-axis selection and the shard-only-when-divisible degradation rule
+# are thin delegates so there is exactly one definition of each
+from repro.mesh.plan import divides as _div, dp_axes  # noqa: F401  (re-export)
 
 
 class _Rules:

@@ -30,13 +30,18 @@ bytes — the bench no longer drives ``core/gossip`` loops directly.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 
 from repro.core import compress as C
+from repro.core.gossip import halo_bytes_per_round
 from repro.mesh import MeshPlan, build_mesh
+
+try:                                   # package mode (python -m benchmarks.x)
+    from benchmarks.run import emit_json
+except ImportError:                    # script mode (python benchmarks/x.py)
+    from run import emit_json
 
 ICI = 50e9
 
@@ -76,11 +81,18 @@ def analytic_rows(r: int):
         mb, nb = m // p, n // q
         for comp in ("none", "int8", "topk"):
             g, ps, ar = bytes_per_round(plan, mb, nb, r, comp)
+            # exact mesh-wide accounting from the same edge geometry the
+            # runtime ppermutes (halo_bytes_per_round lives next to
+            # exchange_halos): boundary agents send fewer edges, so the
+            # total is NOT p·q × the interior-agent figure
+            halo = halo_bytes_per_round(plan, mb, nb, r, comp, grid=(p, q))
+            assert halo["per_interior_agent_bytes"] == g
             rows.append({
                 "grid": f"{p}x{q}", "m": m, "n": n, "rank": r,
                 "compression": comp,
                 "gossip_bytes": g, "server_bytes": ps,
                 "ring_allreduce_bytes": ar,
+                "halo_total_bytes": halo["total_bytes"],
                 "ici_us": g / ICI * 1e6,
                 "vs_server": g / ps, "vs_allreduce": g / ar,
             })
@@ -134,11 +146,18 @@ def measured_row(rounds: int):
     steady = [b - a for a, b in zip(stamps.t[1:-1], stamps.t[2:])]
     mb, nb = m // p, n // q
     g, ps, ar = bytes_per_round(plan, mb, nb, 4)
+    # what the fit above actually moved: exact per-round wire bytes from
+    # the plan's device-grid edge geometry (the same figure the Gossip
+    # schedule streams into train_gossip_halo_bytes_total)
+    halo = halo_bytes_per_round(plan, mb, nb, 4)
+    cu, cw = res.consensus_error()
     return {
         "grid": f"{p}x{q}", "m": m, "n": n, "rank": 4,
         "devices": ndev, "rounds": rounds,
         "ms_per_round": min(steady) / rounds * 1e3,
         "final_cost": res.final_cost,
+        "consensus_error": max(float(cu), float(cw)),
+        "halo": halo,
         "gossip_bytes": g, "server_bytes": ps,
         "ring_allreduce_bytes": ar, "vs_server": g / ps,
     }
@@ -175,21 +194,18 @@ def main(argv=None):
         print(f"measured {measured['grid']} grid on {measured['devices']} "
               f"device(s): {measured['ms_per_round']:.2f} ms/round "
               f"({measured['rounds']} rounds, cost "
-              f"{measured['final_cost']:.3e})")
+              f"{measured['final_cost']:.3e}, consensus "
+              f"{measured['consensus_error']:.3e}, "
+              f"{measured['halo']['total_bytes']} halo B/round)")
 
     if args.json:
-        out = {
-            "bench": "gossip_comm",
-            "backend": jax.default_backend(),
-            "config": {"rank": args.rank, "ici_gbps": ICI / 1e9,
-                       "measure": bool(args.measure)},
-            "rows": rows,
-        }
+        payload = {"rows": rows}
         if measured is not None:
-            out["measured"] = measured
-        with open(args.json, "w") as f:
-            json.dump(out, f, indent=2)
-        print(f"wrote {args.json}")
+            payload["measured"] = measured
+        emit_json(args.json, "gossip_comm",
+                  {"rank": args.rank, "ici_gbps": ICI / 1e9,
+                   "measure": bool(args.measure)},
+                  **payload)
 
 
 if __name__ == "__main__":

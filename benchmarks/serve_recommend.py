@@ -1,7 +1,11 @@
 """Top-k recommendation serving throughput bench.
 
 Measures batched masked top-k throughput (users/s, item-scores/s, per-batch
-latency) on a MovieLens-scale serving index.  Two index sources:
+latency) through the production front end — ``RecommendService`` — on a
+MovieLens-scale serving index, so the numbers include exactly what a
+deployment pays (fixed-batch chunking, host round-trip) and the service's
+own telemetry (``serve_batch_seconds`` p50/p99, QPS via
+``service.metrics()``) lands in the ``--json`` output.  Index sources:
 
 * default: random factors at the requested shape — serving cost does not
   depend on factor values, so this isolates pure serving throughput;
@@ -22,17 +26,21 @@ latency) on a MovieLens-scale serving index.  Two index sources:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.mesh import MeshPlan
-from repro.serve.recommend import (RecommendIndex, build_seen_table,
-                                   recommend_topk, recommend_topk_sharded,
-                                   shard_index)
+from repro.serve.recommend import (RecommendIndex, RecommendService,
+                                   build_seen_table)
+
+try:                                   # package mode (python -m benchmarks.x)
+    from benchmarks.run import emit_json
+except ImportError:                    # script mode (python benchmarks/x.py)
+    from run import emit_json
 
 
 def _random_index(args) -> RecommendIndex:
@@ -89,56 +97,55 @@ def main():
 
     index = _fitted_index(args) if args.from_fit else _random_index(args)
     num_users, num_items = index.u.shape[0], index.w.shape[0]
+    seen_width = int(index.seen.shape[1])
 
-    shards = 1
-    if args.sharded:
-        plan = MeshPlan.for_devices()
-        sidx = shard_index(index, plan)
-        shards = sidx.num_item_shards
-        query = lambda ub: recommend_topk_sharded(sidx, ub, k=args.k)
-    else:
-        query = lambda ub: recommend_topk(index, ub, k=args.k)
+    plan = MeshPlan.for_devices() if args.sharded else None
+    service = RecommendService(index, batch=args.batch, k=args.k, plan=plan)
+    shards = service.num_item_shards
 
     rng = np.random.default_rng(1)
     user_batches = [
-        jnp.asarray(rng.integers(0, num_users, args.batch), jnp.int32)
+        rng.integers(0, num_users, args.batch).astype(np.int32)
         for _ in range(args.iters)
     ]
-    # warmup/compile
-    query(user_batches[0])[0].block_until_ready()
+    # warmup/compile outside the measured window, then drop its telemetry
+    # so the reported p50/p99 are steady-state batches only
+    service.recommend(user_batches[0])
+    obs.reset()
+    service.reset_metrics()
 
     t0 = time.perf_counter()
     for ub in user_batches:
-        items, scores = query(ub)
-    items.block_until_ready()
-    dt = time.perf_counter() - t0
+        items, scores = service.recommend(ub)
+    dt = time.perf_counter() - t0       # recommend() already synced
 
     total_users = args.batch * args.iters
     per_batch_ms = dt / args.iters * 1e3
+    serving = service.metrics()
     print(f"index: {num_users} users x {num_items} items, rank {args.rank}, "
-          f"seen table width {index.seen.shape[1]}, {shards} item shard(s) "
+          f"seen table width {seen_width}, {shards} item shard(s) "
           f"(backend={jax.default_backend()})")
     print(f"batch={args.batch} k={args.k}: {per_batch_ms:.2f} ms/batch, "
           f"{total_users / dt:,.0f} users/s, "
           f"{total_users * num_items / dt / 1e6:,.0f}M scores/s")
+    lat = serving["latency"]
+    if lat["count"]:
+        print(f"service: p50={lat['p50'] * 1e3:.2f}ms "
+              f"p99={lat['p99'] * 1e3:.2f}ms over {lat['count']} batches, "
+              f"{serving['qps']:.1f} req/s")
 
     if args.json:
-        out = {
-            "bench": "serve_recommend",
-            "backend": jax.default_backend(),
-            "config": {"users": num_users, "items": num_items,
-                       "rank": args.rank, "batch": args.batch, "k": args.k,
-                       "iters": args.iters, "density": args.density,
-                       "from_fit": bool(args.from_fit),
-                       "sharded": bool(args.sharded),
-                       "item_shards": shards},
-            "per_batch_ms": per_batch_ms,
-            "users_per_s": total_users / dt,
-            "scores_per_s": total_users * num_items / dt,
-        }
-        with open(args.json, "w") as f:
-            json.dump(out, f, indent=2)
-        print(f"wrote {args.json}")
+        emit_json(args.json, "serve_recommend",
+                  {"users": num_users, "items": num_items,
+                   "rank": args.rank, "batch": args.batch, "k": args.k,
+                   "iters": args.iters, "density": args.density,
+                   "from_fit": bool(args.from_fit),
+                   "sharded": bool(args.sharded),
+                   "item_shards": shards},
+                  per_batch_ms=per_batch_ms,
+                  users_per_s=total_users / dt,
+                  scores_per_s=total_users * num_items / dt,
+                  serving=serving)
 
 
 if __name__ == "__main__":

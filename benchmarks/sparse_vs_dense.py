@@ -25,7 +25,6 @@ output records the per-chunk timings + the fastest choice per density.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -35,6 +34,11 @@ from repro.config import GossipMCConfig
 from repro.core.state import init_state
 from repro.data import lowrank_problem
 from repro.mc import CompletionProblem
+
+try:                                   # package mode (python -m benchmarks.x)
+    from benchmarks.run import emit_json
+except ImportError:                    # script mode (python benchmarks/x.py)
+    from run import emit_json
 
 
 def _sync(out):
@@ -148,17 +152,11 @@ def main():
         print(f"{r['density']:8.3f}  {cells}  c={r['chunk_best']}")
 
     if args.json:
-        out = {
-            "bench": "sparse_vs_dense",
-            "backend": jax.default_backend(),
-            "config": {"m": cfg.m, "n": cfg.n, "p": p, "q": q,
-                       "rank": cfg.rank, "iters": args.iters,
-                       "chunks": args.chunks},
-            "rows": rows,
-        }
-        with open(args.json, "w") as f:
-            json.dump(out, f, indent=2)
-        print(f"\nwrote {args.json}")
+        emit_json(args.json, "sparse_vs_dense",
+                  {"m": cfg.m, "n": cfg.n, "p": p, "q": q,
+                   "rank": cfg.rank, "iters": args.iters,
+                   "chunks": args.chunks},
+                  rows=rows)
 
 
 if __name__ == "__main__":

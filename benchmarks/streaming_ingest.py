@@ -21,7 +21,6 @@ Times the two halves of the online loop (DESIGN.md §11) on one
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -30,6 +29,11 @@ import numpy as np
 from repro.config import GossipMCConfig
 from repro.data import lowrank_problem
 from repro.mc import CompletionProblem, Trainer, Wave
+
+try:                                   # package mode (python -m benchmarks.x)
+    from benchmarks.run import emit_json
+except ImportError:                    # script mode (python benchmarks/x.py)
+    from run import emit_json
 
 
 def main():
@@ -125,29 +129,23 @@ def main():
           f"{rmse_refit - rmse_cold:+.2e}")
 
     if args.json:
-        out = {
-            "bench": "streaming_ingest",
-            "backend": jax.default_backend(),
-            "config": {"m": args.m, "n": args.n, "p": p, "q": q,
-                       "rank": args.rank, "density": args.density,
-                       "stream_frac": args.stream_frac,
-                       "headroom": args.headroom, "rounds": args.rounds,
-                       "refit_rounds": refit_rounds},
-            "ingest_ms": t_ingest * 1e3,
-            "append": append_rows,
-            "refit": {
-                "initial_fit_s": t_fit0,
-                "refit_s": t_refit,
-                "cold_fit_s": t_cold,
-                "refit_wall_speedup": t_cold / max(t_refit, 1e-9),
-                "rmse_refit": float(rmse_refit),
-                "rmse_cold": float(rmse_cold),
-                "rmse_gap": float(rmse_refit - rmse_cold),
-            },
-        }
-        with open(args.json, "w") as f:
-            json.dump(out, f, indent=2)
-        print(f"\nwrote {args.json}")
+        emit_json(args.json, "streaming_ingest",
+                  {"m": args.m, "n": args.n, "p": p, "q": q,
+                   "rank": args.rank, "density": args.density,
+                   "stream_frac": args.stream_frac,
+                   "headroom": args.headroom, "rounds": args.rounds,
+                   "refit_rounds": refit_rounds},
+                  ingest_ms=t_ingest * 1e3,
+                  append=append_rows,
+                  refit={
+                      "initial_fit_s": t_fit0,
+                      "refit_s": t_refit,
+                      "cold_fit_s": t_cold,
+                      "refit_wall_speedup": t_cold / max(t_refit, 1e-9),
+                      "rmse_refit": float(rmse_refit),
+                      "rmse_cold": float(rmse_cold),
+                      "rmse_gap": float(rmse_refit - rmse_cold),
+                  })
 
 
 if __name__ == "__main__":

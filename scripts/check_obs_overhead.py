@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""CI gate: telemetry must be (near-)free on the training hot path.
+
+Runs the same small gossip fit repeatedly with the ``repro.obs`` registry
+enabled and disabled (alternating, so drift hits both arms equally) and
+compares the best wall-clock of each arm.  The instrumented path does a
+handful of counter increments and one histogram observe per *chunk* of
+rounds — nothing per round — so enabled-vs-disabled must stay within
+``--tol`` (default 2%, the DESIGN.md §12 budget).
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to gate
+the real multi-device exchange path (the CI multidevice-smoke job does).
+
+    PYTHONPATH=src python scripts/check_obs_overhead.py \
+        [--rounds 60] [--eval-every 20] [--reps 5] [--tol 0.02]
+
+Exit status 1 when the ratio exceeds the tolerance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+
+def build_fit(rounds: int, eval_every: int):
+    """One small gossip fit on whatever devices exist, as a closure."""
+
+    from repro.config import GossipMCConfig
+    from repro.data import lowrank_problem
+    from repro.mc import CompletionProblem, Gossip, Trainer
+    from repro.mesh import MeshPlan, build_mesh
+
+    ndev = len(jax.devices())
+    dr = 2 if ndev % 2 == 0 and ndev > 1 else 1
+    dc = ndev // dr
+    p, q = max(2, dr), max(2, dc)
+    m = n = 48 * max(p, q)
+    mesh = build_mesh((dr, dc), ("data", "model"))
+    plan = MeshPlan.build(p, q, mesh=mesh)
+    ds = lowrank_problem(m, n, r=4, density=0.2, seed=0)
+    problem = CompletionProblem.from_dataset(ds, p, q, rank=4,
+                                             layout="sparse", mesh=plan)
+    cfg = GossipMCConfig(m=m, n=n, p=p, q=q, rank=4)
+    sched = Gossip(num_rounds=rounds, eval_every=eval_every, plan=plan)
+
+    def fit():
+        res = Trainer(cfg).fit(problem, sched, seed=0)
+        jax.block_until_ready(res.state.U)
+        return res
+
+    return fit
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--eval-every", type=int, default=20)
+    ap.add_argument("--reps", type=int, default=5,
+                    help="timed fits per arm (best-of)")
+    ap.add_argument("--tol", type=float, default=0.02,
+                    help="allowed (on/off - 1) overhead ratio")
+    args = ap.parse_args(argv)
+
+    from repro import obs
+
+    fit = build_fit(args.rounds, args.eval_every)
+    fit()                                  # compile once, outside both arms
+
+    times = {True: [], False: []}
+    for rep in range(args.reps):           # alternate: drift hits both arms
+        for enabled in (False, True):
+            prev = obs.set_enabled(enabled)
+            try:
+                t0 = time.perf_counter()
+                fit()
+                times[enabled].append(time.perf_counter() - t0)
+            finally:
+                obs.set_enabled(prev)
+
+    best_off, best_on = min(times[False]), min(times[True])
+    ratio = best_on / best_off
+    print(f"telemetry off: best {best_off * 1e3:.1f} ms over {args.reps} "
+          f"fits (all: {[f'{t * 1e3:.1f}' for t in times[False]]})")
+    print(f"telemetry on:  best {best_on * 1e3:.1f} ms over {args.reps} "
+          f"fits (all: {[f'{t * 1e3:.1f}' for t in times[True]]})")
+    print(f"overhead ratio on/off = {ratio:.4f} (tolerance {1 + args.tol})")
+    if ratio > 1 + args.tol:
+        print(f"FAIL: telemetry overhead {100 * (ratio - 1):.2f}% exceeds "
+              f"{100 * args.tol:.0f}%", file=sys.stderr)
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Render a ``repro.obs`` metrics snapshot as a terminal table.
+
+Accepts either form the repo produces:
+
+* a bare registry snapshot (``obs.to_json()`` output / the dicts the CI
+  jobs upload as artifacts), or
+* any ``benchmarks/*.py --json`` file — the shared envelope from
+  ``benchmarks/run.py`` — in which case the embedded ``"metrics"`` key is
+  rendered (with the bench/backend/git provenance as a header).
+
+    PYTHONPATH=src python scripts/obs_report.py bench-gossip-comm.json
+    PYTHONPATH=src python scripts/obs_report.py snapshot.json
+    some-cmd | PYTHONPATH=src python scripts/obs_report.py -
+
+Exit status is 1 when the file has no metrics at all — the CI jobs use
+that as the "bench forgot its snapshot" tripwire.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fmt(v: float) -> str:
+    """Compact numeric cell: integers verbatim, floats to 4 significant
+    digits (latencies in seconds and byte counts share the columns)."""
+
+    if isinstance(v, (int, float)) and float(v) == int(v) and abs(v) < 1e15:
+        return f"{int(v):,}"
+    return f"{v:.4g}"
+
+
+def render(snapshot: dict, out=sys.stdout) -> int:
+    """Print the three metric families; returns the number of metrics."""
+
+    counters = snapshot.get("counters", {})
+    gauges = snapshot.get("gauges", {})
+    hists = snapshot.get("histograms", {})
+    total = len(counters) + len(gauges) + len(hists)
+
+    def section(title, rows):
+        if not rows:
+            return
+        out.write(f"\n{title}\n")
+        width = max(len(k) for k in rows)
+        for k in sorted(rows):
+            out.write(f"  {k:<{width}}  {rows[k]}\n")
+
+    section("counters", {k: _fmt(v) for k, v in counters.items()})
+    section("gauges", {k: _fmt(v) for k, v in gauges.items()})
+    if hists:
+        out.write("\nhistograms\n")
+        width = max(len(k) for k in hists)
+        cols = ("count", "mean", "p50", "p90", "p99", "max")
+        head = "  ".join(f"{c:>10}" for c in cols)
+        out.write(f"  {'':<{width}}  {head}\n")
+        for k in sorted(hists):
+            s = hists[k]
+            cells = "  ".join(
+                f"{_fmt(s[c]):>10}" if c in s else f"{'-':>10}" for c in cols
+            )
+            out.write(f"  {k:<{width}}  {cells}\n")
+    return total
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="snapshot or bench JSON ('-' for stdin)")
+    args = ap.parse_args(argv)
+
+    if args.path == "-":
+        data = json.load(sys.stdin)
+    else:
+        with open(args.path) as f:
+            data = json.load(f)
+
+    if "metrics" in data:                      # bench envelope
+        print(f"bench={data.get('bench')} backend={data.get('backend')} "
+              f"git_rev={data.get('git_rev')}")
+        data = data["metrics"]
+    total = render(data)
+    if total == 0:
+        print("no metrics in file", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

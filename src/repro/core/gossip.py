@@ -250,6 +250,48 @@ def make_gossip_step(
     return step, (problem_spec, carry_spec)
 
 
+def halo_bytes_per_round(plan: MeshPlan, mb: int, nb: int, r: int,
+                         compression: str = "none",
+                         grid: tuple[int, int] | None = None) -> dict:
+    """Exact wire bytes one gossip round moves — from the plan's edge specs.
+
+    No estimation: this is the same geometry ``exchange_halos`` executes.
+    Each device's U-edge message is its first/last local block *column*,
+    shape ``(blocks_per_row_shard, mb, r)`` (sharded ``plan.row_edge_spec``),
+    ppermuted along the col axes; W edges are the dual.  The boundary sends
+    are dropped by the permutation (``_shift`` excludes out-of-range
+    pairs), so only *interior* device pairs carry bytes — on a 1×1 plan
+    the total is exactly 0, and the per-round counter the ``Gossip``
+    schedule keeps (``train_gossip_halo_bytes_total``) matches the wires.
+
+    ``grid=(R, C)`` overrides the device grid for analytic accounting
+    (``benchmarks/gossip_comm.py`` models the paper's one-agent-per-block
+    deployment without materializing devices).  Compression (int8/top-k)
+    is applied per message via ``compress.message_bytes_n`` — again the
+    byte model the wire format defines, not a ratio guess.
+    """
+
+    R, Cc = grid if grid is not None else (plan.row_size, plan.col_size)
+    bpr = plan.p // R
+    bpc = plan.q // Cc
+    u_floats = bpr * mb * r                 # one U edge message, in floats
+    w_floats = bpc * nb * r
+    u_msg = C.message_bytes_n(u_floats, compression)
+    w_msg = C.message_bytes_n(w_floats, compression)
+    # 2 directions (first/last edge) x interior neighbour pairs
+    u_bytes = 2 * R * (Cc - 1) * u_msg
+    w_bytes = 2 * Cc * (R - 1) * w_msg
+    interior = 2 * (u_msg + w_msg)          # what one interior agent sends
+    return {
+        "u_edge_message_bytes": u_msg,
+        "w_edge_message_bytes": w_msg,
+        "u_bytes": u_bytes,
+        "w_bytes": w_bytes,
+        "total_bytes": u_bytes + w_bytes,
+        "per_interior_agent_bytes": interior,
+    }
+
+
 def init_carry(state: State) -> GossipCarry:
     """Zero halos + zero error feedback (shapes are the *global* array
     shapes; shard_map slices them)."""

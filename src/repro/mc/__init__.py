@@ -7,7 +7,7 @@ Three nouns over the whole engine (DESIGN.md §4 Session API):
     Trainer           — one ``fit(problem, schedule=...)`` with pluggable
                         Schedule strategies (Sequential / Wave / FullGD /
                         Gossip) and a callback protocol (EvalRMSE,
-                        BenchLogger, Checkpoint)
+                        BenchLogger, Telemetry, Checkpoint)
     FitResult         — final State, loss trace, wall-clock stats, and
                         ``.to_recommend_index()`` bridging into
                         ``serve.recommend``
@@ -22,6 +22,7 @@ from repro.mc.callbacks import (
     Callback,
     Checkpoint,
     EvalRMSE,
+    Telemetry,
     restore_session,
 )
 from repro.mc.problem import CompletionProblem, EngineOptions
@@ -47,6 +48,7 @@ __all__ = [
     "CompletionProblem",
     "EngineOptions",
     "EvalRMSE",
+    "Telemetry",
     "FitResult",
     "FullGD",
     "Gossip",

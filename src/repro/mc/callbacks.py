@@ -13,7 +13,13 @@ Hooks (all optional — subclass and override what you need):
 Stock callbacks:
 
     EvalRMSE   — held-out completion RMSE trace (assemble + stream-eval)
-    BenchLogger— wall-clock + cost trace, printed and/or collected
+    BenchLogger— wall-clock + cost trace, printed and/or collected;
+                 device-true stamps (``obs.device_sync`` before the clock
+                 reads, so timings measure compute, not dispatch)
+    Telemetry  — streams per-boundary metrics (units, cost, consensus
+                 error, device-true eval-interval time) into the
+                 ``repro.obs`` registry — the training plane's feed into
+                 the one process-wide snapshot (DESIGN.md §12)
     Checkpoint — restart-exact save/restore via CheckpointManager: persists
                  (U, W, t, key, unit) so ``Trainer.fit(resume_from=...)``
                  replays the identical key stream from the saved boundary
@@ -28,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.core import assemble as asm
 from repro.core.state import State
@@ -56,10 +63,13 @@ class EvalRMSE(Callback):
     formatted line per point."""
 
     def __init__(self, test_rows=None, test_cols=None, test_vals=None,
-                 log: Optional[Callable[[str], None]] = None):
+                 log: Optional[Callable[[str], None]] = None,
+                 consensus: bool = True):
         self._given = (test_rows, test_cols, test_vals)
         self.log = log
+        self.consensus = consensus
         self.history: list[tuple[int, float]] = []
+        self.consensus_history: list[tuple[int, float, float]] = []
         self._problem = None
         self._triplets = None
 
@@ -85,13 +95,26 @@ class EvalRMSE(Callback):
         rows, cols, vals = self._triplets
         r = asm.rmse(u, w, rows, cols, vals)
         self.history.append((int(state.t), r))
+        line = f"  t={int(state.t):>8d}  cost={cost:.4e}  rmse={r:.4f}"
+        if self.consensus:
+            # surface how far the replicated factor copies disagree — the
+            # gossip-specific convergence signal that cost/rmse both hide
+            cu, cw = asm.consensus_error(state.U, state.W)
+            self.consensus_history.append((int(state.t), cu, cw))
+            line += f"  consensus={max(cu, cw):.3e}"
         if self.log:
-            self.log(f"  t={int(state.t):>8d}  cost={cost:.4e}  rmse={r:.4f}")
+            self.log(line)
 
 
 class BenchLogger(Callback):
     """Wall-clock + cost trace: ``.history`` holds (unit, t, cost,
-    seconds-since-fit-start) rows; ``log`` gets one line per eval."""
+    seconds-since-fit-start) rows; ``log`` gets one line per eval.
+
+    Stamps are **device-true**: jax dispatches asynchronously, so a bare
+    ``perf_counter()`` at an eval boundary would measure how fast work was
+    *enqueued*, not computed.  Both the fit-start and eval stamps sync on
+    the live factors first (``obs.device_sync`` — the same primitive
+    ``obs.span`` uses, so bench timings and span histograms agree)."""
 
     def __init__(self, log: Optional[Callable[[str], None]] = print):
         self.log = log
@@ -102,11 +125,76 @@ class BenchLogger(Callback):
         self._t0 = time.perf_counter()
 
     def on_eval(self, unit, cost, state, key) -> None:
-        dt = time.perf_counter() - self._t0
+        obs.device_sync(state.U)            # timings measure compute,
+        dt = time.perf_counter() - self._t0  # not dispatch
         self.history.append((unit, int(state.t), cost, dt))
         if self.log:
             self.log(f"  [{dt:8.2f}s] unit={unit:>8d} t={int(state.t):>8d} "
                      f"cost={cost:.4e}")
+
+
+class Telemetry(Callback):
+    """Stream training metrics into the ``repro.obs`` registry.
+
+    Attach to any ``Trainer`` and every schedule reports through the same
+    names (one snapshot for sequential, wave, full-GD and gossip fits):
+
+        train_units_total          counter — schedule units advanced
+                                   (rounds or iterations: == the schedule's
+                                   round count after a full fit)
+        train_evals_total          counter — eval boundaries fired
+        train_fits_total           counter — completed fits
+        train_cost                 gauge   — last eval-boundary cost
+        train_consensus_error      gauge   — max of the U/W consensus
+                                   errors (``consensus=False`` skips the
+                                   assemble-side computation)
+        train_eval_interval_seconds  histogram — device-true time between
+                                   boundaries (synced on the live factors
+                                   before stamping, same as BenchLogger)
+        train_fit_seconds          histogram — whole-fit wall time
+
+    The gossip plane adds its own ``train_gossip_*`` round counters (time,
+    exact halo bytes) from inside the schedule loop; this callback is the
+    schedule-agnostic remainder.  All metrics respect the global
+    ``obs.set_enabled`` switch (disabled ⇒ pure no-op)."""
+
+    def __init__(self, registry: Optional[obs.Registry] = None,
+                 consensus: bool = True):
+        self.registry = registry if registry is not None else obs.get_registry()
+        self.consensus = consensus
+        self._last_unit = 0
+        self._t_last = 0.0
+        self._t_start = 0.0
+
+    def on_fit_start(self, problem, schedule, cfg) -> None:
+        self._last_unit = 0
+        self._t_start = self._t_last = time.perf_counter()
+
+    def on_eval(self, unit, cost, state, key) -> None:
+        reg = self.registry
+        if not reg.enabled:
+            return
+        obs.device_sync(state.U)
+        now = time.perf_counter()
+        reg.histogram("train_eval_interval_seconds").observe(
+            now - self._t_last)
+        self._t_last = now
+        reg.counter("train_units_total").inc(max(unit - self._last_unit, 0))
+        self._last_unit = unit
+        reg.counter("train_evals_total").inc()
+        reg.gauge("train_cost").set(float(cost))
+        if self.consensus:
+            cu, cw = asm.consensus_error(state.U, state.W)
+            reg.gauge("train_consensus_error").set(max(float(cu), float(cw)))
+
+    def on_fit_end(self, result) -> None:
+        reg = self.registry
+        if not reg.enabled:
+            return
+        reg.counter("train_fits_total").inc()
+        reg.histogram("train_fit_seconds").observe(
+            time.perf_counter() - self._t_start)
+        reg.gauge("train_final_cost").set(result.final_cost)
 
 
 class Checkpoint(Callback):

@@ -170,6 +170,8 @@ class Gossip(Schedule):
                               col_axes=self.col_axes)
 
     def run(self, problem, cfg, key, *, state=None, done=0, eval_cb=None):
+        from repro import obs
+
         eng = problem.engine
         plan = self._plan(problem)
         if state is None:
@@ -178,6 +180,16 @@ class Gossip(Schedule):
         carry = core_gossip.init_carry(state)
         eval_every = self.eval_every or self.num_rounds
         steps: dict[int, Any] = {}
+
+        # exact comm accounting from the plan's edge specs: what one round
+        # moves over the wires (0 on a 1x1 plan — no wires, no bytes)
+        spec = problem.spec
+        round_bytes = core_gossip.halo_bytes_per_round(
+            plan, spec.mb, spec.nb, spec.r, self.compression,
+        )["total_bytes"] / max(self.staleness, 1)
+        rounds_c = obs.counter("train_gossip_rounds_total")
+        bytes_c = obs.counter("train_gossip_halo_bytes_total")
+        round_h = obs.histogram("train_gossip_round_seconds")
 
         def step_for(n: int):
             if n not in steps:
@@ -194,7 +206,11 @@ class Gossip(Schedule):
         rd = done
         while rd < self.num_rounds:
             n = min(eval_every - rd % eval_every, self.num_rounds - rd)
-            carry = step_for(n)(problem.data, carry)
+            with obs.span("gossip.rounds") as sp:
+                carry = sp.outputs(step_for(n)(problem.data, carry))
+            rounds_c.inc(n)
+            bytes_c.inc(n * round_bytes)
+            round_h.observe(sp.seconds / n)
             rd += n
             cost = float(core_gossip.distributed_cost(
                 None, problem.data, carry.state, cfg.lam, plan=plan,

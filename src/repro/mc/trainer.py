@@ -36,6 +36,7 @@ from typing import Optional, Sequence, Union
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.config import GossipMCConfig
 from repro.core import assemble as asm
@@ -191,11 +192,15 @@ class Trainer:
             for cb in self.callbacks:
                 cb.on_eval(unit, cost, st, k)
 
+        # the span is the fit's outermost timer: device-true (syncs the
+        # final factors before the clock stops) and TraceAnnotation-named,
+        # so a Perfetto capture (obs.trace) shows one slice per fit
         t0 = time.perf_counter()
-        state, history = sched.run(
-            problem, cfg, key, state=state, done=done,
-            eval_cb=eval_cb if self.callbacks else None,
-        )
+        with obs.span(f"fit.{sched.name}", annotate=True) as sp:
+            state, history = sp.outputs(sched.run(
+                problem, cfg, key, state=state, done=done,
+                eval_cb=eval_cb if self.callbacks else None,
+            ))
         result = FitResult(
             state=state, history=history,
             wall_time=time.perf_counter() - t0,

@@ -1,0 +1,67 @@
+"""``repro.obs`` — unified telemetry: one registry, one span primitive,
+one export schema.
+
+Three planes report here (DESIGN.md §12):
+
+* **training** — ``repro.mc.Telemetry`` callback + the ``Gossip``
+  schedule's per-round counters (round time, exact halo-exchange bytes
+  from the ``MeshPlan`` edge specs, consensus error);
+* **ingest** — ``sparse/store.py`` / ``sparse/sharded.py`` append/ingest
+  counters, ``free_slots`` gauge, per-shard routed-entry counts;
+* **serving** — ``RecommendService`` batch-latency histograms + QPS
+  (``service.metrics()``).
+
+Exports ride the same schema everywhere: ``snapshot()`` is what
+``benchmarks/run.py`` embeds under every bench JSON's ``"metrics"`` key
+and what ``scripts/obs_report.py`` renders.  ``set_enabled(False)`` turns
+every instrument into a shared no-op (the 2%-overhead CI gate pins the
+enabled path).
+
+    from repro import obs
+
+    obs.counter("my_events_total").inc()
+    with obs.span("hot.region") as sp:
+        sp.outputs(jitted_fn(x))
+    obs.snapshot()["histograms"]['span_seconds{name=hot.region}']["p99"]
+"""
+
+from repro.obs.registry import (
+    DEFAULT_EDGES,
+    Counter,
+    Gauge,
+    Histogram,
+    NOOP,
+    Registry,
+    counter,
+    enabled,
+    gauge,
+    get_registry,
+    histogram,
+    reset,
+    set_enabled,
+    snapshot,
+    to_json,
+)
+from repro.obs.spans import Span, device_sync, span, trace
+
+__all__ = [
+    "DEFAULT_EDGES",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "NOOP",
+    "Registry",
+    "Span",
+    "counter",
+    "device_sync",
+    "enabled",
+    "gauge",
+    "get_registry",
+    "histogram",
+    "reset",
+    "set_enabled",
+    "snapshot",
+    "span",
+    "to_json",
+    "trace",
+]

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from functools import partial
 from typing import NamedTuple
 
@@ -39,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map
 from repro.core.assemble import assemble
 from repro.core.grid import GridSpec
@@ -330,7 +332,14 @@ class RecommendService:
     unchanged.  A sharded service holds the catalog **only** as its
     per-device shards (``self.index`` is ``None``): retaining the
     unsharded copy would pin the full n×r factor matrix on one device,
-    which is exactly what ``plan=`` exists to avoid."""
+    which is exactly what ``plan=`` exists to avoid.
+
+    Every ``recommend`` call streams into the ``repro.obs`` registry:
+    ``serve_batch_seconds`` (queue-to-answer latency per jitted batch —
+    the host-side ``np.asarray`` copy already syncs the device, so the
+    stamp is device-true), ``serve_requests_total`` / ``serve_users_total``
+    / ``serve_batches_total`` counters.  ``metrics()`` summarizes them
+    into p50/p99 latency and QPS (DESIGN.md §12)."""
 
     def __init__(self, index: RecommendIndex, batch: int = 256, k: int = 10,
                  exclude_seen: bool = True, plan=None):
@@ -344,6 +353,12 @@ class RecommendService:
         else:
             self._sharded = None
             self.index = index
+        # first/last answer stamps bound the QPS window; per-instance so
+        # two services sharing the process registry don't mix their rates
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self._served_users = 0
+        self._served_requests = 0
 
     @property
     def num_users(self) -> int:
@@ -391,7 +406,11 @@ class RecommendService:
         # mixes universes within one call
         index = self.index
         sharded = self._sharded
+        lat_h = obs.histogram("serve_batch_seconds")
+        if self._t_first is None:
+            self._t_first = time.perf_counter()
         for s in range(0, n, self.batch):           # universes within a call
+            t0 = time.perf_counter()
             chunk = user_ids[s : s + self.batch]
             pad = self.batch - len(chunk)
             if pad:
@@ -407,6 +426,47 @@ class RecommendService:
                     k=self.k, exclude_seen=self.exclude_seen,
                 )
             take = min(self.batch, n - s)
+            # the host copies force the device sync, so the stamp below
+            # is the true queue-to-answer latency of this batch
             out_items[s : s + take] = np.asarray(items)[:take]
             out_scores[s : s + take] = np.asarray(scores)[:take]
+            lat_h.observe(time.perf_counter() - t0)
+            obs.counter("serve_batches_total").inc()
+        self._t_last = time.perf_counter()
+        self._served_users += n
+        self._served_requests += 1
+        obs.counter("serve_requests_total").inc()
+        obs.counter("serve_users_total").inc(n)
         return out_items, out_scores
+
+    def reset_metrics(self) -> None:
+        """Zero this service's request/QPS window — benches call it after
+        the warmup/compile request so ``metrics()`` reports steady state.
+        (The shared ``serve_*`` registry metrics are separate; reset those
+        with ``obs.reset()``.)"""
+
+        self._t_first = self._t_last = None
+        self._served_users = self._served_requests = 0
+
+    def metrics(self) -> dict:
+        """Latency/throughput summary of everything served so far.
+
+        ``latency`` holds the ``serve_batch_seconds`` histogram summary
+        (count/mean/p50/p90/p99, seconds per jitted batch); ``qps`` and
+        ``users_per_s`` divide the served totals by the first-to-last
+        answer window.  All zeros before the first ``recommend`` call or
+        when the registry is disabled."""
+
+        summ = obs.histogram("serve_batch_seconds").summary()
+        window = 0.0
+        if self._t_first is not None and self._t_last is not None:
+            window = self._t_last - self._t_first
+        rate = (1.0 / window) if window > 0 else 0.0
+        return {
+            "latency": summ,
+            "requests": self._served_requests,
+            "users": self._served_users,
+            "qps": self._served_requests * rate,
+            "users_per_s": self._served_users * rate,
+            "window_seconds": window,
+        }

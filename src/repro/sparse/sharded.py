@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map
 from repro.mesh.plan import MeshPlan
 from repro.sparse import store as store_mod
@@ -137,6 +138,10 @@ class ShardedEntries:
         for sdi in range(plan.row_size):
             for sdj in range(plan.col_size):
                 sel = shard_of == sdi * plan.col_size + sdj
+                # per-owner routing counts: a skewed ingest (hot shard)
+                # shows up here before it shows up as a straggler
+                obs.counter("ingest_routed_entries_total",
+                            shard=f"{sdi},{sdj}").inc(int(sel.sum()))
                 lbi = bi[sel] - sdi * bpr          # shard-local block coords
                 lbj = bj[sel] - sdj * bpc
                 lrr, lcc, lvv = rr[sel], cc[sel], vals[sel]
@@ -274,6 +279,8 @@ class ShardedEntries:
         patched: dict[tuple[int, int], dict[str, np.ndarray]] = {}
         for key in sorted(set(zip(sdi.tolist(), sdj.tolist()))):
             osel = (sdi == key[0]) & (sdj == key[1])
+            obs.counter("ingest_routed_entries_total",
+                        shard=f"{key[0]},{key[1]}").inc(int(osel.sum()))
             loc = {f: np.asarray(shard_maps[f][key].data)
                    for f in shard_maps}
             ent = {f: loc[f].reshape(bpr * bpc, -1).copy()

@@ -46,12 +46,14 @@ minibatch sampling).
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import grid as G
 from repro.data.synthetic import MCDataset
 from repro.sparse.entries import BlockEntries
@@ -209,7 +211,11 @@ def _pack_sorted(blk, rr, cc, vv, p, q, mb, nb, bucket,
         jnp.asarray(row_ptr.reshape(p, q, mb + 1)),
         jnp.asarray(col_ptr.reshape(p, q, nb + 1)),
     )
-    return SparseProblem(entries, jnp.asarray(nnz.reshape(p, q).astype(np.int32)))
+    sp = SparseProblem(entries, jnp.asarray(nnz.reshape(p, q).astype(np.int32)))
+    obs.counter("ingest_entries_total").inc(total)
+    # min over blocks: the append slack of the block that would raise first
+    obs.gauge("ingest_free_slots").set(int(E - (nnz.max() if total else 0)))
+    return sp
 
 
 def from_blocks(
@@ -446,6 +452,7 @@ def append_entries(
         )
     if len(rows) == 0:
         return sp
+    t0 = time.perf_counter()
     p, q = sp.nnz.shape
     mb, nb = sp.mb, sp.nb
     m, n = p * mb, q * nb
@@ -485,8 +492,16 @@ def append_entries(
         jnp.asarray(rptr.reshape(p, q, mb + 1)),
         jnp.asarray(cptr.reshape(p, q, nb + 1)),
     )
-    return SparseProblem(entries,
-                         jnp.asarray(nnz.reshape(p, q).astype(np.int32)))
+    out = SparseProblem(entries,
+                        jnp.asarray(nnz.reshape(p, q).astype(np.int32)))
+    # the ingest plane's scoreboard: calls, entries, splice latency, and
+    # how close the buckets are to overflowing (min over blocks — the
+    # block that will raise first)
+    obs.counter("ingest_appends_total").inc()
+    obs.counter("ingest_appended_entries_total").inc(len(rows))
+    obs.histogram("ingest_append_seconds").observe(time.perf_counter() - t0)
+    obs.gauge("ingest_free_slots").set(int((E - nnz).min()))
+    return out
 
 
 def density(sp: SparseProblem, spec: G.GridSpec | int | None = None,

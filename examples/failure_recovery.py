@@ -9,6 +9,13 @@ all live state lost), then resumes from the latest checkpoint with
 identical key stream and the two final states agree **bit-for-bit**
 (asserted).
 
+Phase 3 flips failure handling from manual to automatic: a fit with a
+deliberately hot step size diverges to NaN, and
+``Trainer.fit(recovery=RecoveryPolicy(...))`` self-heals — the
+``DivergenceGuard`` fires at the eval boundary, the trainer restarts
+with a decayed step size, and the restart is audited in
+``FitResult.recovery_log`` (DESIGN.md §13, docs/robustness.md).
+
     PYTHONPATH=src python examples/failure_recovery.py
 """
 
@@ -19,7 +26,8 @@ import numpy as np
 
 from repro.config import GossipMCConfig
 from repro.data import lowrank_problem
-from repro.mc import Callback, Checkpoint, CompletionProblem, Trainer, Wave
+from repro.mc import (Callback, Checkpoint, CompletionProblem,
+                      RecoveryPolicy, Trainer, Wave)
 
 ROUNDS, EVAL_EVERY, CRASH_AT = 12, 2, 7
 
@@ -77,6 +85,22 @@ def main():
     print("✓ restart is exact (state matches the uninterrupted run "
           "bit-for-bit)")
     shutil.rmtree(ckpt_dir)
+
+    # phase 3: divergence self-heals instead of killing the run
+    hot = GossipMCConfig(m=24, n=20, rank=2, p=2, q=2, a=2e-3)
+    small = lowrank_problem(hot.m, hot.n, hot.rank, density=0.6, seed=1)
+    prob = CompletionProblem.from_dataset(small, hot.p, hot.q, hot.rank)
+    heal_dir = tempfile.mkdtemp(prefix="repro_heal_")
+    res = Trainer(hot, callbacks=[Checkpoint(heal_dir)]).fit(
+        prob, "wave", num_rounds=20, eval_every=5,
+        recovery=RecoveryPolicy(max_restarts=3, backoff=0.25))
+    entry = res.recovery_log[0]
+    print(f"  🩹 diverged at round {entry['unit']} ({entry['reason']}); "
+          f"restarted with a={entry['step_a']:g}")
+    assert np.isfinite(res.final_cost)
+    print(f"✓ self-healed final cost:  {res.final_cost:.6e} "
+          f"({len(res.recovery_log)} restart)")
+    shutil.rmtree(heal_dir)
 
 
 if __name__ == "__main__":

@@ -15,6 +15,13 @@ Accepts either form the repo produces:
 
 Exit status is 1 when the file has no metrics at all — the CI jobs use
 that as the "bench forgot its snapshot" tripwire.
+
+Chaos tripwire: a fault-injection bench envelope whose config declares
+``p_drop > 0`` MUST carry the fault counters
+(``gossip_edges_dropped_total`` / ``gossip_stale_rounds_total``) — exit
+status 1 when they are absent, so a refactor that silently unplugs the
+fault instrumentation fails the ``chaos-smoke`` CI job instead of
+shipping blind.
 """
 
 from __future__ import annotations
@@ -77,14 +84,26 @@ def main(argv=None) -> int:
         with open(args.path) as f:
             data = json.load(f)
 
+    config = {}
     if "metrics" in data:                      # bench envelope
         print(f"bench={data.get('bench')} backend={data.get('backend')} "
               f"git_rev={data.get('git_rev')}")
+        config = data.get("config") or {}
         data = data["metrics"]
     total = render(data)
     if total == 0:
         print("no metrics in file", file=sys.stderr)
         return 1
+    if float(config.get("p_drop") or 0) > 0:
+        counters = data.get("counters", {})
+        missing = [k for k in ("gossip_edges_dropped_total",
+                               "gossip_stale_rounds_total")
+                   if k not in counters]
+        if missing:
+            print(f"fault injection configured (p_drop="
+                  f"{config['p_drop']}) but fault counters missing: "
+                  f"{', '.join(missing)}", file=sys.stderr)
+            return 1
     return 0
 
 

@@ -1,3 +1,9 @@
-from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    checkpoint_valid,
+    load_pytree,
+    save_pytree,
+)
 
-__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+__all__ = ["CheckpointManager", "checkpoint_valid", "save_pytree",
+           "load_pytree"]

@@ -2,8 +2,13 @@
 
 Design (1000-node posture, DESIGN.md §5):
 
-* **Atomic**: write to ``step_<n>.tmp/`` then ``os.rename`` — a crash
-  mid-save can never corrupt the latest checkpoint.
+* **Atomic**: write to a ``step_<n>.tmp/`` sibling then ``os.rename`` — a
+  crash mid-save can never corrupt the latest checkpoint.  Each completed
+  save ends with a ``MANIFEST.json`` (leaf count + file list, written
+  last); ``latest_step``/``restore`` verify it and *skip* partial or
+  corrupt step dirs — falling back to the newest valid step on disk even
+  when the ``LATEST`` pointer is stale or points at garbage (kill-mid-save
+  covered in ``tests/test_checkpoint.py``).
 * **Sharded**: arrays are chunked into ≤``shard_bytes`` .npy shards so each
   host writes its slice in parallel on a real cluster (here: one host, same
   format).  The pytree structure is stored as a JSON skeleton keyed by
@@ -29,6 +34,7 @@ import jax
 import numpy as np
 
 _SKELETON = "skeleton.json"
+_MANIFEST = "MANIFEST.json"
 
 
 def _paths_and_leaves(tree):
@@ -43,12 +49,15 @@ def save_pytree(tree: Any, directory: str, shard_bytes: int = 1 << 30) -> None:
     os.makedirs(tmp, exist_ok=True)
     flat, _ = _paths_and_leaves(tree)
     skeleton = []
+    files = []
     for i, (path, leaf) in enumerate(flat):
         arr = np.asarray(jax.device_get(leaf))
         nshards = max(1, -(-arr.nbytes // shard_bytes))
         chunks = np.array_split(arr.reshape(-1), nshards) if arr.ndim else [arr]
         for s, chunk in enumerate(chunks):
-            np.save(os.path.join(tmp, f"a{i:05d}_s{s:03d}.npy"), chunk)
+            name = f"a{i:05d}_s{s:03d}.npy"
+            np.save(os.path.join(tmp, name), chunk)
+            files.append(name)
         skeleton.append({
             "path": path, "index": i, "shape": list(arr.shape),
             "dtype": str(arr.dtype), "nshards": len(chunks),
@@ -56,9 +65,44 @@ def save_pytree(tree: Any, directory: str, shard_bytes: int = 1 << 30) -> None:
         })
     with open(os.path.join(tmp, _SKELETON), "w") as f:
         json.dump(skeleton, f)
+    # the manifest is written LAST: its presence certifies every shard
+    # file above it landed, so validity = "manifest parses + every listed
+    # file exists" — a kill at any earlier point leaves a dir that the
+    # manager provably skips
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump({"num_leaves": len(skeleton), "files": files,
+                   "complete": True}, f)
     if os.path.exists(directory):
         shutil.rmtree(directory)
     os.rename(tmp, directory)
+
+
+def checkpoint_valid(directory: str) -> bool:
+    """True iff ``directory`` holds a complete checkpoint.
+
+    Primary check: the ``MANIFEST.json`` written last by
+    :func:`save_pytree` parses, claims completeness, its leaf count
+    matches the skeleton, and every listed shard file exists.  Dirs from
+    the pre-manifest format (no ``MANIFEST.json``) fall back to a
+    skeleton-derived file check so old checkpoints stay restorable."""
+
+    skel_p = os.path.join(directory, _SKELETON)
+    man_p = os.path.join(directory, _MANIFEST)
+    try:
+        with open(skel_p) as f:
+            skeleton = json.load(f)
+        if os.path.exists(man_p):
+            with open(man_p) as f:
+                man = json.load(f)
+            if not man.get("complete") or man["num_leaves"] != len(skeleton):
+                return False
+            files = man["files"]
+        else:  # legacy layout: reconstruct the expected shard list
+            files = [f"a{e['index']:05d}_s{s:03d}.npy"
+                     for e in skeleton for s in range(e["nshards"])]
+        return all(os.path.exists(os.path.join(directory, n)) for n in files)
+    except (OSError, ValueError, KeyError, TypeError):
+        return False
 
 
 def load_pytree(directory: str, like: Any, reshard_to: Any | None = None) -> Any:
@@ -104,12 +148,37 @@ class CheckpointManager:
                    os.path.join(self.directory, "LATEST"))
         self._gc()
 
+    def valid_steps(self) -> list[int]:
+        """Steps on disk whose dirs pass :func:`checkpoint_valid`,
+        ascending.  Partial dirs from a killed save never appear here."""
+
+        steps = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    s = int(d.split("_")[1])
+                except ValueError:
+                    continue
+                if checkpoint_valid(self._step_dir(s)):
+                    steps.append(s)
+        return sorted(steps)
+
     def latest_step(self) -> int | None:
+        """Newest *valid* step: the LATEST pointer when its dir verifies,
+        else the newest step dir that does (a stale pointer or a dir
+        corrupted after the pointer moved degrades, never raises)."""
+
         p = os.path.join(self.directory, "LATEST")
-        if not os.path.exists(p):
-            return None
-        with open(p) as f:
-            return int(f.read().strip())
+        if os.path.exists(p):
+            try:
+                with open(p) as f:
+                    step = int(f.read().strip())
+            except (OSError, ValueError):
+                step = None
+            if step is not None and checkpoint_valid(self._step_dir(step)):
+                return step
+        valid = self.valid_steps()
+        return valid[-1] if valid else None
 
     def restore(self, like: Any, step: int | None = None,
                 reshard_to: Any | None = None) -> tuple[int, Any] | None:
@@ -124,3 +193,8 @@ class CheckpointManager:
             if d.startswith("step_") and not d.endswith(".tmp"))
         for s in steps[: -self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        for d in os.listdir(self.directory):  # orphans of killed saves
+            if d.endswith(".tmp") and os.path.isdir(
+                    os.path.join(self.directory, d)):
+                shutil.rmtree(os.path.join(self.directory, d),
+                              ignore_errors=True)

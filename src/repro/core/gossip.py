@@ -16,6 +16,17 @@ and reused in between — a straggling neighbour delays only its seam, never
 the pod.  Optional int8/top-k message compression (compress.py) with error
 feedback rides on the halo exchange.
 
+Fault tolerance (``faults=FaultPlan(...)``, DESIGN.md §13): a dropped or
+straggling edge message leaves the receiver on its **last received** halo;
+``HaloState.age`` tracks rounds-since-receive per direction, and past
+``max_staleness`` missed refreshes the seam degrades to the block's
+local-only gradient instead of pulling toward stale (or never-received)
+data.  Fault decisions are pure functions of ``(key, round, edge)``
+(``repro.faults.FaultPlan``), so chaos runs replay bit-exactly; with
+``p_drop=0`` the fault path is bit-identical to the fault-free one
+(pinned by test).  Drop/stale/straggle counts accumulate in the carry
+(``FaultStats``) for the ``Gossip`` schedule to stream into ``repro.obs``.
+
 Every step here lowers to: 4 collective-permutes of (edge × r) floats +
 purely local compute.  That is the paper's communication pattern, verbatim.
 """
@@ -34,17 +45,43 @@ from repro.config import GossipMCConfig
 from repro.core import objective as obj
 from repro.core.state import Problem, State
 from repro.core import compress as C
+from repro.faults.plan import AGE_NEVER
 from repro.mesh.plan import MeshPlan
 from repro.sparse.store import SparseProblem
 
 
 class HaloState(NamedTuple):
-    """Cached neighbour edges (refreshed every ``staleness`` rounds)."""
+    """Cached neighbour edges (refreshed every ``staleness`` rounds).
+
+    ``age`` counts *missed refreshes* since each direction's halo was last
+    successfully received: 0 = fresh, k = k refresh rounds dropped or
+    straggled in a row, ``AGE_NEVER`` = never received (the init sentinel,
+    so zero-initialized halos can never pull a seam toward zero).  Lanes
+    follow ``repro.faults.DIRECTIONS`` order; the array is shaped on the
+    block grid ``(p, q, 4)`` so it shards exactly like the factor stacks
+    and ``init_carry`` needs no device count.  Ages only move under a
+    ``FaultPlan`` — the fault-free path threads them through untouched."""
 
     left_u: jax.Array    # left neighbour's last block-col U   (pl, mb, r)
     right_u: jax.Array   # right neighbour's first block-col U (pl, mb, r)
     up_w: jax.Array      # upper neighbour's last block-row W  (ql, nb, r)
     down_w: jax.Array    # lower neighbour's first block-row W (ql, nb, r)
+    age: jax.Array       # rounds since last receive            (pl, ql, 4) i32
+
+
+class FaultStats(NamedTuple):
+    """Per-device fault counters accumulated inside the jitted step.
+
+    Each leaf is an int32 array on the block grid ``(p, q)``; a device
+    records into its *first local block* only, so the host-side sum over
+    the whole array is the true cross-device total (no per-block
+    double-count).  The ``Gossip`` schedule diffs these between chunks
+    into the obs counters ``gossip_edges_dropped_total`` /
+    ``gossip_stale_rounds_total`` / ``gossip_straggled_edges_total``."""
+
+    dropped: jax.Array    # edge messages lost outright
+    stale: jax.Array      # rounds computed on >=1 fault-stale halo
+    straggled: jax.Array  # edge messages late (reused-stale, counted apart)
 
 
 class GossipCarry(NamedTuple):
@@ -54,6 +91,8 @@ class GossipCarry(NamedTuple):
     ef_u_first: jax.Array
     ef_w_last: jax.Array
     ef_w_first: jax.Array
+    rnd: jax.Array        # absolute gossip round (the FaultPlan clock), () i32
+    stats: FaultStats
 
 
 def _shift(x, axis_name, mesh_size, direction: int):
@@ -72,11 +111,14 @@ def _axis_size(axis_name) -> int:
 
 
 def exchange_halos(U, W, row_axes, col_axes, compression="none",
-                   ef=None, topk_fraction=0.25):
+                   ef=None, topk_fraction=0.25, age=None):
     """One gossip exchange; returns HaloState + updated error feedback.
 
     Messages: my last/first block column of U (along col axes) and my
-    last/first block row of W (along row axes)."""
+    last/first block row of W (along row axes).  ``age`` is threaded into
+    the returned HaloState untouched (fault handling merges/ages it in
+    ``make_gossip_step``); when omitted, a fresh all-received age of 0 is
+    used — every message of this exchange did arrive."""
 
     dc = _axis_size(col_axes)
     dr = _axis_size(row_axes)
@@ -94,19 +136,34 @@ def exchange_halos(U, W, row_axes, col_axes, compression="none",
                 msgs[k], compression, st, topk_fraction
             )
             new_ef[k] = stn.residual if stn is not None else None
+    if age is None:
+        age = jnp.zeros(U.shape[:2] + (4,), jnp.int32)
     halos = HaloState(
         left_u=_shift(msgs["u_last"], col_axes, dc, +1),
         right_u=_shift(msgs["u_first"], col_axes, dc, -1),
         up_w=_shift(msgs["w_last"], row_axes, dr, +1),
         down_w=_shift(msgs["w_first"], row_axes, dr, -1),
+        age=age,
     )
     return halos, new_ef
 
 
 def _local_gradients(problem: Problem, U, W, halos: HaloState,
                      row_axes, col_axes, rho, lam, use_kernel=False,
-                     method="segment", chunk=None):
-    """∇L on the local tile, seam terms from halos, boundaries masked."""
+                     method="segment", chunk=None, gates=None):
+    """∇L on the local tile, seam terms from halos, boundaries masked.
+
+    ``gates`` (fault path only): 4 scalar bools in DIRECTIONS order —
+    edge-exists AND halo-age within ``max_staleness``.  A gated-off seam
+    contributes nothing: the block degrades to its local-only gradient
+    instead of pulling toward stale/never-received data.  Gating
+    substitutes the *halo operand* (``where(gate, halo, own_edge)`` makes
+    the seam difference exactly x - x = 0) rather than masking the
+    product, for two reasons: an injected NaN halo would leak through a
+    multiply mask (0.0 * NaN = NaN), and keeping the seam expression
+    token-identical to the ungated path preserves XLA's fusion choices —
+    with every gate open the result is bit-identical to ``gates=None``
+    (pinned by test)."""
 
     from repro.core.waves import full_gradients
 
@@ -121,16 +178,26 @@ def _local_gradients(problem: Problem, U, W, halos: HaloState,
     dc = _axis_size(col_axes)
     dr = _axis_size(row_axes)
 
+    if gates is None:
+        left_h, right_h = halos.left_u, halos.right_u
+        up_h, down_h = halos.up_w, halos.down_w
+    else:
+        g_left, g_right, g_up, g_down = gates
+        left_h = jnp.where(g_left, halos.left_u, U[:, 0])
+        right_h = jnp.where(g_right, halos.right_u, U[:, -1])
+        up_h = jnp.where(g_up, halos.up_w, W[0])
+        down_h = jnp.where(g_down, halos.down_w, W[-1])
+
     # seam pair (left neighbour's last col, my first col): d/dU_mine = 2ρ(mine-theirs)
     left_valid = (c > 0).astype(U.dtype)
-    gU = gU.at[:, 0].add(2.0 * rho * left_valid * (U[:, 0] - halos.left_u))
+    gU = gU.at[:, 0].add(2.0 * rho * left_valid * (U[:, 0] - left_h))
     right_valid = (c < dc - 1).astype(U.dtype)
-    gU = gU.at[:, -1].add(2.0 * rho * right_valid * (U[:, -1] - halos.right_u))
+    gU = gU.at[:, -1].add(2.0 * rho * right_valid * (U[:, -1] - right_h))
 
     up_valid = (r_ > 0).astype(W.dtype)
-    gW = gW.at[0].add(2.0 * rho * up_valid * (W[0] - halos.up_w))
+    gW = gW.at[0].add(2.0 * rho * up_valid * (W[0] - up_h))
     down_valid = (r_ < dr - 1).astype(W.dtype)
-    gW = gW.at[-1].add(2.0 * rho * down_valid * (W[-1] - halos.down_w))
+    gW = gW.at[-1].add(2.0 * rho * down_valid * (W[-1] - down_h))
     return gU, gW
 
 
@@ -150,6 +217,8 @@ def make_gossip_step(
     layout: str = "dense",
     method: str = "segment",
     chunk: int | None = None,
+    faults=None,
+    max_staleness: int = 3,
 ):
     """Build the jitted distributed gossip round.
 
@@ -168,9 +237,25 @@ def make_gossip_step(
     input resharding).  ``method``/``chunk`` select the sparse gradient
     engine (see ``repro.mc.EngineOptions``).  The session-level entry
     point is ``repro.mc.Trainer.fit(problem, schedule=Gossip(...))``.
+
+    ``faults`` takes a ``repro.faults.FaultPlan`` (duck-typed: anything
+    with ``edge_events``/``nan_event``/``nan_at``/``p_drop_edge``); each
+    round it draws drop/straggle masks keyed on ``(key, carry.rnd,
+    receiver_device)`` and a missed edge keeps the last received halo.
+    Once a direction's ``HaloState.age`` exceeds ``max_staleness`` missed
+    refreshes, that seam is gated out of the gradient entirely.  With
+    ``faults=None`` the legacy code path runs verbatim (bit-identical).
+    Faults + compression is rejected: dropping a compressed message after
+    its error-feedback residual update would corrupt the EF invariant.
     """
 
     p, q = spec_pq
+    if faults is not None and compression != "none":
+        raise ValueError(
+            "faults cannot be combined with message compression: a dropped "
+            "compressed message would desynchronize the error-feedback "
+            "residuals (the sender already folded the residual update in)"
+        )
     if plan is None:
         plan = MeshPlan.build(p, q, mesh=mesh, row_axes=row_axes,
                               col_axes=col_axes)
@@ -185,7 +270,7 @@ def make_gossip_step(
     n_struct = 2 * (p - 1) * (q - 1)
 
     def local_round(problem: Problem, carry: GossipCarry, step_i) -> GossipCarry:
-        state, halos = carry.state, carry.halos
+        state, prev = carry.state, carry.halos
         ef = {
             "u_last": carry.ef_u_last, "u_first": carry.ef_u_first,
             "w_last": carry.ef_w_last, "w_first": carry.ef_w_first,
@@ -195,27 +280,84 @@ def make_gossip_step(
             h, ef_new = exchange_halos(
                 state.U, state.W, row_axes, col_axes, compression,
                 ef if compression != "none" else None, topk_fraction,
+                age=prev.age,
             )
             if compression == "none":
                 return h, tuple(ef.values())
             return h, tuple(ef_new[k] for k in ef)
 
         def keep(_):
-            return halos, tuple(ef.values())
+            return prev, tuple(ef.values())
 
-        halos, ef_vals = jax.lax.cond(
-            step_i % staleness == 0, refresh, keep, operand=None
-        )
+        is_refresh = step_i % staleness == 0
+        halos, ef_vals = jax.lax.cond(is_refresh, refresh, keep, operand=None)
+
+        stats = carry.stats
+        gates = None
+        if faults is not None:
+            c = jax.lax.axis_index(col_axes)
+            r_ = jax.lax.axis_index(row_axes)
+            dc = _axis_size(col_axes)
+            dr = _axis_size(row_axes)
+            # which of my 4 halo directions have a real neighbour
+            exists = jnp.stack([c > 0, c < dc - 1, r_ > 0, r_ < dr - 1])
+            # fault decisions keyed on the *receiver* device's linear index
+            drops, straggles = faults.edge_events(carry.rnd, r_ * dc + c)
+            # straggler = late message: for this synchronous simulation the
+            # receiver reuses the stale halo exactly like a drop, but the
+            # event is accounted separately (and costed by the bench via
+            # FaultPlan.straggler_scale)
+            arrived = is_refresh & ~(drops | straggles)
+            fresh = (halos.left_u, halos.right_u, halos.up_w, halos.down_w)
+            stale = (prev.left_u, prev.right_u, prev.up_w, prev.down_w)
+            inject = faults.nan_event(carry.rnd)
+            merged, ages = [], []
+            for d in range(4):
+                v = jnp.where(arrived[d], fresh[d], stale[d])
+                if faults.nan_at is not None:
+                    v = jnp.where(inject & exists[d],
+                                  jnp.full_like(v, jnp.nan), v)
+                # age: reset on receive, saturating +1 per missed refresh,
+                # frozen on planned keep rounds (those are not faults)
+                a_d = jnp.where(
+                    arrived[d], 0,
+                    jnp.where(is_refresh,
+                              jnp.minimum(prev.age[..., d] + 1, AGE_NEVER),
+                              prev.age[..., d]),
+                )
+                merged.append(v)
+                ages.append(a_d)
+            age = jnp.stack(ages, axis=-1)
+            halos = HaloState(*merged, age)
+            # scalar per-direction seam gates (every local block of a shard
+            # shares one device, hence one age) — beyond the bound the
+            # block runs on its local-only gradient
+            a0 = age[0, 0]
+            gates = tuple(exists[d] & (a0[d] <= max_staleness)
+                          for d in range(4))
+            # record at the first local block only: host-side sum over the
+            # (p, q) stats grid = true cross-device totals
+            n_drop = jnp.sum((drops & exists & is_refresh).astype(jnp.int32))
+            n_strag = jnp.sum(
+                (straggles & ~drops & exists & is_refresh).astype(jnp.int32))
+            was_stale = jnp.any(exists & (a0 >= 1)).astype(jnp.int32)
+            stats = FaultStats(
+                dropped=stats.dropped.at[0, 0].add(n_drop),
+                stale=stats.stale.at[0, 0].add(was_stale),
+                straggled=stats.straggled.at[0, 0].add(n_strag),
+            )
+
         # consensus damped 1/2 in deterministic full-grad mode (waves.py)
         gU, gW = _local_gradients(
             problem, state.U, state.W, halos, row_axes, col_axes,
             rho=rho * 0.5, lam=lam, use_kernel=use_kernel,
-            method=method, chunk=chunk,
+            method=method, chunk=chunk, gates=gates,
         )
         lr = obj.gamma(state.t.astype(jnp.float32), a, b)
         new_state = State(state.U - lr * gU, state.W - lr * gW,
                           state.t + n_struct)
-        return GossipCarry(new_state, halos, *ef_vals)
+        return GossipCarry(new_state, halos, *ef_vals,
+                           carry.rnd + 1, stats)
 
     def shard_body(problem: Problem, carry: GossipCarry) -> GossipCarry:
         def body(c, i):
@@ -235,8 +377,9 @@ def make_gossip_step(
         problem_spec = Problem(pspec2, pspec2)
     state_spec = plan.state_spec()
     re_, ce = plan.row_edge_spec, plan.col_edge_spec
-    halo_spec = HaloState(re_, re_, ce, ce)
-    carry_spec = GossipCarry(state_spec, halo_spec, re_, re_, ce, ce)
+    halo_spec = HaloState(re_, re_, ce, ce, pspec2)
+    carry_spec = GossipCarry(state_spec, halo_spec, re_, re_, ce, ce,
+                             P(), FaultStats(pspec2, pspec2, pspec2))
 
     step = jax.jit(
         _shard_map(
@@ -292,9 +435,13 @@ def halo_bytes_per_round(plan: MeshPlan, mb: int, nb: int, r: int,
     }
 
 
-def init_carry(state: State) -> GossipCarry:
+def init_carry(state: State, round0: int = 0) -> GossipCarry:
     """Zero halos + zero error feedback (shapes are the *global* array
-    shapes; shard_map slices them)."""
+    shapes; shard_map slices them).
+
+    Ages start at ``AGE_NEVER`` (nothing has been received yet) and the
+    fault clock at ``round0`` — a resumed fit passes its completed round
+    count so ``FaultPlan`` replay continues at the right position."""
 
     p, q, mb, r = state.U.shape
     nb = state.W.shape[2]
@@ -303,6 +450,7 @@ def init_carry(state: State) -> GossipCarry:
         right_u=jnp.zeros((p, mb, r), jnp.float32),
         up_w=jnp.zeros((q, nb, r), jnp.float32),
         down_w=jnp.zeros((q, nb, r), jnp.float32),
+        age=jnp.full((p, q, 4), AGE_NEVER, jnp.int32),
     )
     return GossipCarry(
         state, halos,
@@ -310,6 +458,12 @@ def init_carry(state: State) -> GossipCarry:
         jnp.zeros((p, mb, r), jnp.float32),
         jnp.zeros((q, nb, r), jnp.float32),
         jnp.zeros((q, nb, r), jnp.float32),
+        jnp.asarray(round0, jnp.int32),
+        FaultStats(
+            dropped=jnp.zeros((p, q), jnp.int32),
+            stale=jnp.zeros((p, q), jnp.int32),
+            straggled=jnp.zeros((p, q), jnp.int32),
+        ),
     )
 
 

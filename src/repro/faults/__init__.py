@@ -1,0 +1,33 @@
+"""``repro.faults`` — deterministic fault injection + self-healing fits.
+
+The robustness substrate for the gossip plane (DESIGN.md §13):
+
+* :class:`FaultPlan` — seed-keyed per-round, per-edge fault masks
+  (drops, stragglers, one-shot NaN corruption), replayed bit-exactly;
+  consumed by ``core.gossip.make_gossip_step(faults=...)``.
+* :class:`DivergenceGuard` / :class:`DivergenceError` — eval-boundary
+  NaN/explosion tripwire that names the unit, cost and hyper-parameters.
+* :class:`RecoveryPolicy` — ``Trainer.fit(recovery=...)``: restore the
+  latest valid checkpoint, re-fold the PRNG key, decay the step size,
+  resume; restarts land in ``FitResult.recovery_log`` and the
+  ``fit_recoveries_total`` counter.
+
+This package imports no ``repro.mc``/``repro.core`` modules, so any
+layer (core, session, benches, tests) can import it without cycles.
+"""
+
+from repro.faults.plan import AGE_NEVER, DIRECTIONS, FaultPlan
+from repro.faults.recovery import (
+    DivergenceError,
+    DivergenceGuard,
+    RecoveryPolicy,
+)
+
+__all__ = [
+    "AGE_NEVER",
+    "DIRECTIONS",
+    "DivergenceError",
+    "DivergenceGuard",
+    "FaultPlan",
+    "RecoveryPolicy",
+]

@@ -201,7 +201,7 @@ def run_gossip_mc(multi_pod: bool, data_dtype=None, mask_dtype=None):
 
     from repro.configs.gossip_mc import PRODUCTION as cfg
     from repro.core import gossip
-    from repro.core.gossip import GossipCarry, HaloState
+    from repro.core.gossip import FaultStats, GossipCarry, HaloState
     from repro.core.state import Problem, State
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -222,12 +222,17 @@ def run_gossip_mc(multi_pod: bool, data_dtype=None, mask_dtype=None):
     halos = HaloState(sds((p, mb, r), jnp.float32),
                       sds((p, mb, r), jnp.float32),
                       sds((q, nb, r), jnp.float32),
-                      sds((q, nb, r), jnp.float32))
+                      sds((q, nb, r), jnp.float32),
+                      sds((p, q, 4), jnp.int32))
     carry = GossipCarry(state, halos,
                         sds((p, mb, r), jnp.float32),
                         sds((p, mb, r), jnp.float32),
                         sds((q, nb, r), jnp.float32),
-                        sds((q, nb, r), jnp.float32))
+                        sds((q, nb, r), jnp.float32),
+                        sds((), jnp.int32),
+                        FaultStats(sds((p, q), jnp.int32),
+                                   sds((p, q), jnp.int32),
+                                   sds((p, q), jnp.int32)))
     step, _ = gossip.make_gossip_step(
         mesh, (p, q), cfg, row_axes=row_axes, col_axes=col_axes,
         use_kernel=False, steps_per_call=1)

@@ -17,6 +17,12 @@ The legacy entry points (``sequential.fit``, ``waves.fit``,
 shims over the same internals; new code goes through this package.
 """
 
+from repro.faults import (
+    DivergenceError,
+    DivergenceGuard,
+    FaultPlan,
+    RecoveryPolicy,
+)
 from repro.mc.callbacks import (
     BenchLogger,
     Callback,
@@ -46,8 +52,12 @@ __all__ = [
     "Callback",
     "Checkpoint",
     "CompletionProblem",
+    "DivergenceError",
+    "DivergenceGuard",
     "EngineOptions",
     "EvalRMSE",
+    "FaultPlan",
+    "RecoveryPolicy",
     "Telemetry",
     "FitResult",
     "FullGD",

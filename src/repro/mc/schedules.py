@@ -28,6 +28,7 @@ import dataclasses
 from typing import Any, Callable, Optional, Union
 
 import jax
+import numpy as np
 
 from repro.config import GossipMCConfig
 from repro.core import gossip as core_gossip
@@ -139,7 +140,15 @@ class Gossip(Schedule):
     compression the halos are rebuilt on the first resumed round, so resume
     is exact.  Stale-halo / error-feedback state is intentionally not
     persisted (a restarted node re-gossips, matching the paper's fault
-    model)."""
+    model).
+
+    ``faults=FaultPlan(...)`` turns on deterministic fault injection
+    (DESIGN.md §13): dropped/straggling edges reuse the last received
+    halo, ages past ``max_staleness`` degrade the seam to the local-only
+    gradient, and per-chunk fault counts stream into the obs registry
+    (``gossip_edges_dropped_total``, ``gossip_stale_rounds_total``,
+    ``gossip_straggled_edges_total``, ``gossip_halo_age``).  With
+    ``faults=None`` the legacy step runs verbatim — bit-identical."""
 
     num_rounds: int = 200
     eval_every: int = 0
@@ -150,6 +159,8 @@ class Gossip(Schedule):
     staleness: int = 1
     compression: str = "none"
     topk_fraction: float = 0.25
+    faults: Any = None
+    max_staleness: int = 3
 
     name = "gossip"
     units = "rounds"
@@ -177,7 +188,9 @@ class Gossip(Schedule):
         if state is None:
             key, ik = jax.random.split(key)
             state = init_state(ik, problem.spec)
-        carry = core_gossip.init_carry(state)
+        # round0=done keeps the FaultPlan clock aligned on resume: replay
+        # continues at the round the checkpoint completed
+        carry = core_gossip.init_carry(state, round0=done)
         eval_every = self.eval_every or self.num_rounds
         steps: dict[int, Any] = {}
 
@@ -190,6 +203,12 @@ class Gossip(Schedule):
         rounds_c = obs.counter("train_gossip_rounds_total")
         bytes_c = obs.counter("train_gossip_halo_bytes_total")
         round_h = obs.histogram("train_gossip_round_seconds")
+        if self.faults is not None:
+            dropped_c = obs.counter("gossip_edges_dropped_total")
+            stale_c = obs.counter("gossip_stale_rounds_total")
+            strag_c = obs.counter("gossip_straggled_edges_total")
+            age_h = obs.histogram("gossip_halo_age")
+            seen = (0, 0, 0)
 
         def step_for(n: int):
             if n not in steps:
@@ -199,6 +218,7 @@ class Gossip(Schedule):
                     topk_fraction=self.topk_fraction,
                     use_kernel=eng.use_kernel, steps_per_call=n,
                     layout=problem.layout, method=eng.method, chunk=eng.chunk,
+                    faults=self.faults, max_staleness=self.max_staleness,
                 )
             return steps[n]
 
@@ -211,6 +231,15 @@ class Gossip(Schedule):
             rounds_c.inc(n)
             bytes_c.inc(n * round_bytes)
             round_h.observe(sp.seconds / n)
+            if self.faults is not None:
+                # carry stats are cumulative device-side; diff per chunk so
+                # counters stream monotonically during the fit
+                tot = tuple(int(np.asarray(x).sum()) for x in carry.stats)
+                dropped_c.inc(tot[0] - seen[0])
+                stale_c.inc(tot[1] - seen[1])
+                strag_c.inc(tot[2] - seen[2])
+                seen = tot
+                self._observe_ages(age_h, plan, carry.halos.age)
             rd += n
             cost = float(core_gossip.distributed_cost(
                 None, problem.data, carry.state, cfg.lam, plan=plan,
@@ -219,6 +248,25 @@ class Gossip(Schedule):
             if eval_cb:
                 eval_cb(rd, cost, carry.state, key)
         return carry.state, history
+
+    @staticmethod
+    def _observe_ages(age_h, plan, age) -> None:
+        """Sample each device's per-direction halo age into the histogram
+        (one block per device — blocks of a shard share the age), skipping
+        non-existent edges and the never-received sentinel."""
+
+        from repro.faults.plan import AGE_NEVER
+
+        ages = np.asarray(age)
+        bpr, bpc = plan.blocks_per_row_shard, plan.blocks_per_col_shard
+        for di in range(plan.row_size):
+            for dj in range(plan.col_size):
+                a = ages[di * bpr, dj * bpc]
+                exists = (dj > 0, dj < plan.col_size - 1,
+                          di > 0, di < plan.row_size - 1)
+                for d in range(4):
+                    if exists[d] and a[d] < AGE_NEVER:
+                        age_h.observe(float(a[d]))
 
 
 _BY_NAME = {

@@ -56,6 +56,9 @@ class FitResult:
     wall_time: float         # seconds inside the schedule loop
     schedule: str            # schedule name ("sequential" | ... | "gossip")
     problem: CompletionProblem
+    # one entry per self-healing restart (Trainer.fit(recovery=...)):
+    # {restart, unit, cost, reason, resumed_from, step_a}
+    recovery_log: list = dataclasses.field(default_factory=list)
 
     @property
     def final_cost(self) -> float:
@@ -152,6 +155,7 @@ class Trainer:
         key: jax.Array | None = None,
         state: State | None = None,
         resume_from: Union[Checkpoint, CheckpointManager, str, None] = None,
+        recovery=None,
         **schedule_overrides,
     ) -> FitResult:
         """Run the schedule to completion and return a :class:`FitResult`.
@@ -161,7 +165,19 @@ class Trainer:
         ``num_rounds=500``) are applied either way.  ``resume_from``
         restarts from the latest session checkpoint written by the
         :class:`Checkpoint` callback (state + PRNG key + progress unit),
-        replaying the exact stream of the uninterrupted run."""
+        replaying the exact stream of the uninterrupted run.
+
+        ``recovery=RecoveryPolicy(...)`` makes the fit self-healing
+        (DESIGN.md §13): a ``DivergenceGuard`` watches every eval
+        boundary (one is prepended if the callbacks don't carry one —
+        guards always run *before* ``Checkpoint`` so a poisoned state is
+        never persisted), and on divergence the fit restores the latest
+        valid checkpoint, re-folds the PRNG key, decays the step size by
+        ``policy.backoff`` per restart, clears one-shot injected faults,
+        and resumes.  Restarts land in ``FitResult.recovery_log`` and the
+        ``fit_recoveries_total`` counter; exhausting ``max_restarts``
+        (or ``on_divergence="raise"``) re-raises the
+        ``DivergenceError``."""
 
         if not isinstance(problem, CompletionProblem):
             raise TypeError(
@@ -174,22 +190,32 @@ class Trainer:
         if key is None:
             key = jax.random.PRNGKey(seed)
 
+        mgr = resume_from
+        if isinstance(mgr, Checkpoint):
+            mgr = mgr.manager
+        if isinstance(mgr, str):
+            mgr = CheckpointManager(mgr)
         done = 0
-        if resume_from is not None:
-            mgr = resume_from
-            if isinstance(mgr, Checkpoint):
-                mgr = mgr.manager
-            if isinstance(mgr, str):
-                mgr = CheckpointManager(mgr)
+        if mgr is not None:
             restored = restore_session(mgr, problem)
             if restored is not None:
                 done, state, key = restored
 
-        for cb in self.callbacks:
+        if recovery is None:
+            return self._run_attempt(problem, sched, cfg, key, state, done,
+                                     self.callbacks)
+        return self._run_recovering(problem, sched, cfg, key, state, done,
+                                    mgr, recovery)
+
+    def _run_attempt(self, problem, sched, cfg, key, state, done,
+                     callbacks, recovery_log=None) -> FitResult:
+        """One uninterrupted schedule run (the body every fit shares)."""
+
+        for cb in callbacks:
             cb.on_fit_start(problem, sched, cfg)
 
         def eval_cb(unit, cost, st, k):
-            for cb in self.callbacks:
+            for cb in callbacks:
                 cb.on_eval(unit, cost, st, k)
 
         # the span is the fit's outermost timer: device-true (syncs the
@@ -199,16 +225,82 @@ class Trainer:
         with obs.span(f"fit.{sched.name}", annotate=True) as sp:
             state, history = sp.outputs(sched.run(
                 problem, cfg, key, state=state, done=done,
-                eval_cb=eval_cb if self.callbacks else None,
+                eval_cb=eval_cb if callbacks else None,
             ))
         result = FitResult(
             state=state, history=history,
             wall_time=time.perf_counter() - t0,
             schedule=sched.name, problem=problem,
+            recovery_log=recovery_log if recovery_log is not None else [],
         )
-        for cb in self.callbacks:
+        for cb in callbacks:
             cb.on_fit_end(result)
         return result
+
+    def _run_recovering(self, problem, sched, cfg, key, state, done,
+                        mgr, recovery) -> FitResult:
+        """The self-healing loop around :meth:`_run_attempt`."""
+
+        from repro.faults import DivergenceError, DivergenceGuard
+
+        if mgr is None:
+            for cb in self.callbacks:
+                if isinstance(cb, Checkpoint):
+                    mgr = cb.manager
+                    break
+        if mgr is None and recovery.on_divergence == "restore":
+            raise ValueError(
+                "recovery with on_divergence='restore' needs a checkpoint "
+                "to restore from: add a Checkpoint callback to the Trainer "
+                "or pass resume_from="
+            )
+        # guards before everything else — in particular before Checkpoint,
+        # so a diverged state is never persisted as a restore point
+        guards = [cb for cb in self.callbacks
+                  if isinstance(cb, DivergenceGuard)]
+        others = [cb for cb in self.callbacks
+                  if not isinstance(cb, DivergenceGuard)]
+        if not guards:
+            guards = [DivergenceGuard()]
+        callbacks = guards + others
+
+        recovery_log: list = []
+        restart = 0
+        attempt_sched, attempt_cfg = sched, cfg
+        while True:
+            try:
+                return self._run_attempt(problem, attempt_sched, attempt_cfg,
+                                         key, state, done, callbacks,
+                                         recovery_log=recovery_log)
+            except DivergenceError as err:
+                if recovery.on_divergence == "raise" \
+                        or restart >= recovery.max_restarts:
+                    raise
+                restart += 1
+                obs.counter("fit_recoveries_total").inc()
+                restored = restore_session(mgr, problem) if mgr else None
+                if restored is not None:
+                    done, state, key = restored
+                else:
+                    # nothing valid on disk yet: restart the fit from
+                    # scratch (still with decayed step size + folded key)
+                    done, state = 0, None
+                # a restarted node draws a fresh (deterministic) stream
+                key = jax.random.fold_in(key, restart)
+                a = cfg.a * recovery.backoff ** restart
+                attempt_cfg = dataclasses.replace(cfg, a=a)
+                faults = getattr(attempt_sched, "faults", None)
+                if faults is not None:
+                    attempt_sched = dataclasses.replace(
+                        attempt_sched, faults=faults.refold(restart))
+                recovery_log.append({
+                    "restart": restart,
+                    "unit": err.unit,
+                    "cost": err.cost,
+                    "reason": err.reason,
+                    "resumed_from": done,
+                    "step_a": a,
+                })
 
     def refit(
         self,

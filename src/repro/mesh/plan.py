@@ -220,6 +220,31 @@ class MeshPlan:
     def blocks_per_col_shard(self) -> int:
         return self.q // self.col_size
 
+    # -- halo-edge geometry (the gossip wire graph, receiver-side view) -- #
+
+    @property
+    def num_u_edges(self) -> int:
+        """Directed U-halo messages per refresh round: each of the
+        ``row_size`` device rows has ``col_size - 1`` interior pairs, each
+        exchanging in both directions.  Matches ``halo_bytes_per_round``'s
+        byte geometry and is the denominator of ``FaultPlan`` drop
+        accounting."""
+
+        return 2 * self.row_size * (self.col_size - 1)
+
+    @property
+    def num_w_edges(self) -> int:
+        """Directed W-halo messages per refresh round (dual of
+        :attr:`num_u_edges`)."""
+
+        return 2 * self.col_size * (self.row_size - 1)
+
+    @property
+    def num_halo_edges(self) -> int:
+        """All directed halo messages one refresh round carries."""
+
+        return self.num_u_edges + self.num_w_edges
+
     # ------------------------------------------------------------------ #
     # ownership
     # ------------------------------------------------------------------ #

@@ -7,7 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.checkpoint import (
+    CheckpointManager,
+    checkpoint_valid,
+    load_pytree,
+    save_pytree,
+)
 from repro.data import LMTokenPipeline
 
 
@@ -58,6 +63,83 @@ def test_crash_mid_save_never_corrupts(tmp_path):
     os.makedirs(tmp_path / "step_0000000002.tmp")
     step, t = mgr.restore(jax.eval_shape(lambda: _tree()))
     assert step == 1
+
+
+def test_kill_mid_save_partial_dir_skipped(tmp_path):
+    """A step dir killed before its manifest landed is skipped: restore
+    falls back to the newest *valid* step, even though the partial dir is
+    newer."""
+
+    import shutil
+
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    # simulate a kill mid-save at a later step: some shards landed, the
+    # manifest (written last) never did
+    src, dst = tmp_path / "step_0000000002", tmp_path / "step_0000000003"
+    shutil.copytree(src, dst)
+    os.remove(dst / "MANIFEST.json")
+    shard = next(f for f in os.listdir(dst) if f.endswith(".npy"))
+    os.remove(dst / shard)
+    assert not checkpoint_valid(str(dst))
+    assert checkpoint_valid(str(src))
+    assert mgr.latest_step() == 2
+    step, t = mgr.restore(jax.eval_shape(lambda: _tree()))
+    assert step == 2
+    np.testing.assert_array_equal(t["a"], _tree(2)["a"])
+
+
+def test_stale_latest_pointer_degrades(tmp_path):
+    """LATEST pointing at a corrupted dir falls back to the newest valid
+    step instead of raising — and to None when nothing valid remains."""
+
+    import shutil
+
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    # corrupt the dir LATEST points at: delete a shard file the manifest
+    # lists (manifest present but incomplete payload)
+    d2 = tmp_path / "step_0000000002"
+    shard = next(f for f in os.listdir(d2) if f.endswith(".npy"))
+    os.remove(d2 / shard)
+    assert not checkpoint_valid(str(d2))
+    assert mgr.latest_step() == 1
+    step, _ = mgr.restore(jax.eval_shape(lambda: _tree()))
+    assert step == 1
+
+    shutil.rmtree(tmp_path / "step_0000000001")
+    assert mgr.latest_step() is None
+    assert mgr.restore(jax.eval_shape(lambda: _tree())) is None
+
+
+def test_truncated_manifest_is_invalid(tmp_path):
+    """Half-written JSON (kill mid-manifest-write before the atomic
+    rename existed) parses as corrupt, not as a crash."""
+
+    save_pytree(_tree(), str(tmp_path / "ck"))
+    with open(tmp_path / "ck" / "MANIFEST.json", "w") as f:
+        f.write('{"num_leaves": 4, "files": ["a000')
+    assert not checkpoint_valid(str(tmp_path / "ck"))
+
+
+def test_legacy_dir_without_manifest_still_valid(tmp_path):
+    """Pre-manifest checkpoints (skeleton + all shards, no MANIFEST.json)
+    keep restoring."""
+
+    save_pytree(_tree(5), str(tmp_path / "ck"))
+    os.remove(tmp_path / "ck" / "MANIFEST.json")
+    assert checkpoint_valid(str(tmp_path / "ck"))
+    t2 = load_pytree(str(tmp_path / "ck"), jax.eval_shape(lambda: _tree()))
+    np.testing.assert_array_equal(t2["a"], _tree(5)["a"])
+
+
+def test_gc_removes_orphaned_tmp_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    os.makedirs(tmp_path / "step_0000000009.tmp")
+    mgr.save(10, _tree(10))
+    assert not (tmp_path / "step_0000000009.tmp").exists()
 
 
 def test_restart_exact_data_stream(tmp_path):

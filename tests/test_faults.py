@@ -1,0 +1,262 @@
+"""Fault model + divergence guard + self-healing fits (single device).
+
+The multi-device chaos paths (drops on a real 4-device mesh, NaN-inject
+auto-restore mid-gossip) live in ``tests/test_mesh_plan.py``'s subprocess
+harness; everything here runs on one device.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.config import GossipMCConfig
+from repro.faults import (
+    AGE_NEVER,
+    DIRECTIONS,
+    DivergenceError,
+    DivergenceGuard,
+    FaultPlan,
+    RecoveryPolicy,
+)
+from repro.mc import CompletionProblem, Checkpoint, Trainer
+
+pytestmark = pytest.mark.chaos
+
+
+# --------------------------------------------------------------------- #
+# FaultPlan: the pure fault function
+# --------------------------------------------------------------------- #
+
+
+def test_fault_plan_is_deterministic():
+    fp = FaultPlan(key=7, p_drop_edge=0.3, p_straggle=0.1)
+    a = fp.replay(20, 4)
+    b = FaultPlan(key=7, p_drop_edge=0.3, p_straggle=0.1).replay(20, 4)
+    np.testing.assert_array_equal(a["drops"], b["drops"])
+    np.testing.assert_array_equal(a["straggles"], b["straggles"])
+    assert a["drops"].shape == (20, 4, len(DIRECTIONS))
+    # ~p_drop of all edge-lanes drop (law of large numbers, loose bound)
+    rate = a["drops"].mean()
+    assert 0.15 < rate < 0.45
+
+
+def test_fault_plan_traced_matches_host():
+    """The same (key, round, edge) decision under jit and on the host."""
+
+    fp = FaultPlan(key=3, p_drop_edge=0.5)
+    host = fp.replay(8, 2)["drops"]
+
+    @jax.jit
+    def traced(rnd, e):
+        return fp.edge_events(rnd, e)[0]
+
+    for rnd in range(8):
+        for e in range(2):
+            np.testing.assert_array_equal(np.asarray(traced(rnd, e)),
+                                          host[rnd, e])
+
+
+def test_fault_plan_key_and_round_sensitivity():
+    fp = FaultPlan(key=0, p_drop_edge=0.5)
+    other_key = FaultPlan(key=1, p_drop_edge=0.5)
+    assert not np.array_equal(fp.replay(20, 2)["drops"],
+                              other_key.replay(20, 2)["drops"])
+    r = fp.replay(20, 1)["drops"]
+    assert any(not np.array_equal(r[i], r[i + 1])
+               for i in range(19))           # rounds draw fresh masks
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="probability"):
+        FaultPlan(p_drop_edge=1.5)
+    with pytest.raises(ValueError, match="probability"):
+        FaultPlan(p_straggle=-0.1)
+    with pytest.raises(ValueError, match="slowdown"):
+        FaultPlan(straggler_scale=0.5)
+    with pytest.raises(ValueError, match="nan_at"):
+        FaultPlan(nan_at=-3)
+
+
+def test_refold_changes_stream_and_clears_nan():
+    fp = FaultPlan(key=0, p_drop_edge=0.5, nan_at=10)
+    rf = fp.refold(1)
+    assert rf.nan_at is None                 # transient faults don't replay
+    assert rf.p_drop_edge == fp.p_drop_edge
+    assert not np.array_equal(fp.replay(20, 2)["drops"],
+                              rf.replay(20, 2)["drops"])
+    # refold is itself deterministic
+    np.testing.assert_array_equal(rf.replay(5, 2)["drops"],
+                                  fp.refold(1).replay(5, 2)["drops"])
+
+
+def test_expected_drops_uses_plan_geometry():
+    """Edge counts come from the device grid, not the block grid: a 1x1
+    device plan has no wires, so expected drops are exactly 0 (the 2x2
+    device-grid geometry is exercised by the subprocess chaos tests and
+    cross-checked against observed counters in gossip_faults.py)."""
+
+    from repro.mesh.plan import MeshPlan
+
+    plan = MeshPlan.build(4, 4)              # 4x4 blocks, 1x1 devices
+    assert plan.num_u_edges == 0 and plan.num_w_edges == 0
+    assert plan.num_halo_edges == 0
+    assert FaultPlan(p_drop_edge=0.2).expected_drops(plan, 100) == 0.0
+
+
+# --------------------------------------------------------------------- #
+# DivergenceGuard / recovery loop
+# --------------------------------------------------------------------- #
+
+
+def _problem(seed=0, m=24, n=20, r=2):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, r)) @ rng.standard_normal((r, n))
+    mask = (rng.random((m, n)) < 0.6).astype(np.float32)
+    return CompletionProblem.from_dense(x, mask, p=2, q=2, rank=r)
+
+
+def _cfg(a):
+    return GossipMCConfig(m=24, n=20, rank=2, p=2, q=2, a=a)
+
+
+DIVERGING_A = 2e-3   # wave schedule blows to NaN at the first eval
+STABLE_A = 5e-4      # paper default — converges
+
+
+def test_guard_raises_named_error():
+    with pytest.raises(DivergenceError) as ei:
+        Trainer(_cfg(DIVERGING_A), callbacks=[DivergenceGuard()]).fit(
+            _problem(), "wave", num_rounds=20, eval_every=5)
+    msg = str(ei.value)
+    assert "unit 5" in msg and "'wave'" in msg
+    assert "a=0.002" in msg and "rho=1000" in msg     # hypers in the message
+    assert ei.value.unit == 5
+    assert not np.isfinite(ei.value.cost)
+
+
+def test_guard_max_cost_ceiling():
+    guard = DivergenceGuard(max_cost=1e-6)
+    with pytest.raises(DivergenceError, match="max_cost ceiling"):
+        Trainer(_cfg(STABLE_A), callbacks=[guard]).fit(
+            _problem(), "wave", num_rounds=10, eval_every=5)
+
+
+def test_guard_validation():
+    with pytest.raises(ValueError, match="explode_factor"):
+        DivergenceGuard(explode_factor=0.5)
+
+
+def test_recovery_policy_validation():
+    with pytest.raises(ValueError, match="max_restarts"):
+        RecoveryPolicy(max_restarts=-1)
+    with pytest.raises(ValueError, match="backoff"):
+        RecoveryPolicy(backoff=0.0)
+    with pytest.raises(ValueError, match="on_divergence"):
+        RecoveryPolicy(on_divergence="retry")
+
+
+def test_self_healing_fit_restarts_with_decayed_step(tmp_path):
+    obs.reset()
+    tr = Trainer(_cfg(DIVERGING_A), callbacks=[Checkpoint(str(tmp_path))])
+    res = tr.fit(_problem(), "wave", num_rounds=20, eval_every=5,
+                 recovery=RecoveryPolicy(max_restarts=3, backoff=0.25))
+    assert np.isfinite(res.final_cost)
+    assert len(res.recovery_log) == 1
+    entry = res.recovery_log[0]
+    assert entry["restart"] == 1
+    assert entry["reason"] == "non-finite cost"
+    assert entry["step_a"] == pytest.approx(DIVERGING_A * 0.25)
+    assert obs.snapshot()["counters"]["fit_recoveries_total"] == 1.0
+
+
+def test_recovery_restores_from_checkpoint(tmp_path):
+    """Phase 1 converges and checkpoints; phase 2 resumes with a diverging
+    step size and self-heals by restoring phase 1's state."""
+
+    prob = _problem()
+    ck = Checkpoint(str(tmp_path))
+    Trainer(_cfg(STABLE_A), callbacks=[ck]).fit(
+        prob, "wave", num_rounds=10, eval_every=5)
+    saved = ck.manager.latest_step()
+    assert saved == 10
+
+    res = Trainer(_cfg(DIVERGING_A), callbacks=[ck]).fit(
+        prob, "wave", num_rounds=20, eval_every=5, resume_from=ck,
+        recovery=RecoveryPolicy(max_restarts=2, backoff=0.25))
+    assert np.isfinite(res.final_cost)
+    assert res.recovery_log and res.recovery_log[0]["resumed_from"] >= saved
+
+
+def test_recovery_exhausts_max_restarts(tmp_path):
+    """backoff=1.0 never fixes the step size → every restart re-diverges →
+    the final DivergenceError escapes after max_restarts attempts."""
+
+    obs.reset()
+    tr = Trainer(_cfg(DIVERGING_A), callbacks=[Checkpoint(str(tmp_path))])
+    with pytest.raises(DivergenceError):
+        tr.fit(_problem(), "wave", num_rounds=20, eval_every=5,
+               recovery=RecoveryPolicy(max_restarts=2, backoff=1.0))
+    assert obs.snapshot()["counters"]["fit_recoveries_total"] == 2.0
+
+
+def test_recovery_raise_mode_is_fatal(tmp_path):
+    tr = Trainer(_cfg(DIVERGING_A), callbacks=[Checkpoint(str(tmp_path))])
+    with pytest.raises(DivergenceError):
+        tr.fit(_problem(), "wave", num_rounds=20, eval_every=5,
+               recovery=RecoveryPolicy(on_divergence="raise"))
+
+
+def test_recovery_without_checkpoint_rejected():
+    with pytest.raises(ValueError, match="Checkpoint"):
+        Trainer(_cfg(DIVERGING_A)).fit(
+            _problem(), "wave", num_rounds=5,
+            recovery=RecoveryPolicy())
+
+
+def test_guard_runs_before_checkpoint(tmp_path):
+    """A diverged state is never persisted: the guard fires at the same
+    eval boundary the Checkpoint would have saved, first."""
+
+    ck = Checkpoint(str(tmp_path))
+    with pytest.raises(DivergenceError):
+        Trainer(_cfg(DIVERGING_A), callbacks=[ck]).fit(
+            _problem(), "wave", num_rounds=20, eval_every=5,
+            recovery=RecoveryPolicy(on_divergence="raise"))
+    assert ck.manager.latest_step() is None   # nothing poisoned on disk
+
+
+def test_fault_free_gossip_carry_unchanged():
+    """faults=None leaves the legacy gossip path bit-identical — the 1x1
+    single-device pin (the 4-device pin lives in test_mesh_plan.py)."""
+
+    from repro.core import gossip
+    from repro.core.state import init_state
+
+    prob = _problem()
+    cfg = _cfg(STABLE_A)
+    st0 = init_state(jax.random.PRNGKey(1), prob.spec)
+    legacy, _ = gossip.make_gossip_step(None, (2, 2), cfg, steps_per_call=5,
+                                        layout=prob.layout)
+    fault0, _ = gossip.make_gossip_step(None, (2, 2), cfg, steps_per_call=5,
+                                        layout=prob.layout,
+                                        faults=FaultPlan(p_drop_edge=0.0))
+    c0 = gossip.init_carry(st0)
+    assert int(c0.rnd) == 0
+    assert int(np.asarray(c0.halos.age).min()) == AGE_NEVER
+    cl = legacy(prob.data, c0)
+    cf = fault0(prob.data, c0)
+    np.testing.assert_array_equal(np.asarray(cl.state.U),
+                                  np.asarray(cf.state.U))
+    np.testing.assert_array_equal(np.asarray(cl.state.W),
+                                  np.asarray(cf.state.W))
+    assert int(cf.rnd) == 5
+
+
+def test_faults_with_compression_rejected():
+    from repro.core import gossip
+
+    cfg = _cfg(STABLE_A)
+    with pytest.raises(ValueError, match="compression"):
+        gossip.make_gossip_step(None, (2, 2), cfg, compression="int8",
+                                faults=FaultPlan(p_drop_edge=0.1))

@@ -410,3 +410,165 @@ except ValueError as e:
     assert "4 shards" in msg and "1 shards" in msg, msg
 print("OK")
 """)
+
+
+# ---------------------------------------------------------------------- #
+# chaos: fault injection + recovery on the real 4-device grid
+# ---------------------------------------------------------------------- #
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_gossip_fault_path_p0_bit_identical_and_p02_converges():
+    """Acceptance pins for the fault model (DESIGN.md §13) on a 2x2
+    device grid: a FaultPlan with p_drop=0 is bit-identical to the
+    fault-free step, and p_drop=0.2 still converges — held-out RMSE
+    within 2x of the fault-free fit at equal rounds, with the drop /
+    staleness counters streaming into the obs registry."""
+
+    run_prog("""
+import numpy as np
+from repro import obs
+from repro.config import GossipMCConfig
+from repro.data import lowrank_problem
+from repro.faults import FaultPlan
+from repro.mc import CompletionProblem, Gossip, Trainer
+from repro.mesh import MeshPlan, build_mesh
+
+m = n = 64; p = q = 2; r = 4; rounds = 40
+mesh = build_mesh((2, 2), ("data", "model"))
+plan = MeshPlan.build(p, q, mesh=mesh)
+ds = lowrank_problem(m, n, r, density=0.3, seed=0)
+problem = CompletionProblem.from_dataset(ds, p, q, r, layout="sparse",
+                                         mesh=plan)
+cfg = GossipMCConfig(m=m, n=n, p=p, q=q, rank=r)
+
+def fit(faults):
+    return Trainer(cfg).fit(
+        problem, Gossip(num_rounds=rounds, plan=plan, faults=faults),
+        seed=0)
+
+clean = fit(None)
+
+# p_drop=0: the fault machinery costs nothing when nothing fails
+p0 = fit(FaultPlan(key=0, p_drop_edge=0.0))
+assert (np.asarray(p0.state.U) == np.asarray(clean.state.U)).all()
+assert (np.asarray(p0.state.W) == np.asarray(clean.state.W)).all()
+
+# p_drop=0.2: graceful degradation, not a cliff
+obs.reset()
+faulty = fit(FaultPlan(key=0, p_drop_edge=0.2))
+ratio = float(faulty.rmse() / clean.rmse())
+assert ratio < 2.0, ratio
+counters = obs.snapshot()["counters"]
+assert counters["gossip_edges_dropped_total"] > 0, counters
+assert counters["gossip_stale_rounds_total"] > 0, counters
+print("OK rmse_vs_clean=", ratio)
+""")
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_gossip_crash_mid_fit_restart_bit_exact():
+    """examples/failure_recovery.py's assertion, lifted to the Gossip
+    schedule on the 4-device grid: crash mid-fit, restore from the last
+    checkpoint, and the resumed fit matches the uninterrupted run
+    bit-for-bit (staleness=1 halos are rebuilt on the first resumed
+    round, so resume is exact)."""
+
+    run_prog("""
+import tempfile
+import numpy as np
+from repro.config import GossipMCConfig
+from repro.data import lowrank_problem
+from repro.mc import (Callback, Checkpoint, CompletionProblem, Gossip,
+                      Trainer)
+from repro.mesh import MeshPlan, build_mesh
+
+m = n = 64; p = q = 2; r = 4
+mesh = build_mesh((2, 2), ("data", "model"))
+plan = MeshPlan.build(p, q, mesh=mesh)
+ds = lowrank_problem(m, n, r, density=0.3, seed=0)
+problem = CompletionProblem.from_dataset(ds, p, q, r, layout="sparse",
+                                         mesh=plan)
+cfg = GossipMCConfig(m=m, n=n, p=p, q=q, rank=r)
+sched = Gossip(num_rounds=12, eval_every=2, plan=plan)
+
+ref = Trainer(cfg).fit(problem, sched, seed=0)
+
+class Crash(RuntimeError):
+    pass
+
+class CrashAt(Callback):
+    def __init__(self, unit):
+        self.unit = unit
+    def on_eval(self, unit, cost, state, key):
+        if unit >= self.unit:
+            raise Crash()
+
+ck = Checkpoint(tempfile.mkdtemp(prefix="chaos_ck_"))
+try:
+    Trainer(cfg, callbacks=[CrashAt(7), ck]).fit(problem, sched, seed=0)
+    raise AssertionError("crash did not fire")
+except Crash:
+    pass
+unit, _, _ = ck.restore(problem)
+assert 0 < unit < 12, unit
+rec = Trainer(cfg, callbacks=[ck]).fit(problem, sched, seed=0,
+                                       resume_from=ck)
+assert (np.asarray(rec.state.U) == np.asarray(ref.state.U)).all()
+assert (np.asarray(rec.state.W) == np.asarray(ref.state.W)).all()
+print("OK resumed from", unit)
+""")
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_gossip_nan_inject_auto_restores():
+    """A fit that hits an injected NaN round self-heals: the guard fires
+    at the next eval, the trainer restores the last valid checkpoint,
+    refolds the fault stream (nan_at cleared — transient faults don't
+    replay), and the resumed fit completes finite, with the restart in
+    FitResult.recovery_log and fit_recoveries_total."""
+
+    run_prog("""
+import tempfile
+import numpy as np
+from repro import obs
+from repro.config import GossipMCConfig
+from repro.data import lowrank_problem
+from repro.faults import FaultPlan, RecoveryPolicy
+from repro.mc import Checkpoint, CompletionProblem, Gossip, Trainer
+from repro.mesh import MeshPlan, build_mesh
+
+m = n = 64; p = q = 2; r = 4
+mesh = build_mesh((2, 2), ("data", "model"))
+plan = MeshPlan.build(p, q, mesh=mesh)
+ds = lowrank_problem(m, n, r, density=0.3, seed=0)
+problem = CompletionProblem.from_dataset(ds, p, q, r, layout="sparse",
+                                         mesh=plan)
+cfg = GossipMCConfig(m=m, n=n, p=p, q=q, rank=r)
+
+# NaN lands at round 5: checkpoints at rounds 2 and 4 are finite, the
+# eval at round 6 sees the poison and the guard fires before Checkpoint
+sched = Gossip(num_rounds=12, eval_every=2, plan=plan,
+               faults=FaultPlan(key=0, nan_at=5))
+ck = Checkpoint(tempfile.mkdtemp(prefix="chaos_nan_"))
+obs.reset()
+res = Trainer(cfg, callbacks=[ck]).fit(
+    problem, sched, seed=0,
+    recovery=RecoveryPolicy(max_restarts=2, backoff=0.5))
+
+assert np.isfinite(res.final_cost), res.final_cost
+assert np.isfinite(np.asarray(res.state.U)).all()
+assert len(res.recovery_log) == 1, res.recovery_log
+entry = res.recovery_log[0]
+assert entry["restart"] == 1
+assert entry["reason"] == "non-finite cost"
+assert entry["resumed_from"] == 4, entry
+assert obs.snapshot()["counters"]["fit_recoveries_total"] == 1.0
+print("OK recovered:", entry)
+""")

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.config import ARCHS, get_smoke_config
 from repro.models import build_model
 from repro.models.api import Ctx
-from repro.serve.engine import ServeLoop
+from repro.launch.lm_engine import ServeLoop
 
 
 def main():

@@ -22,6 +22,13 @@ Chaos tripwire: a fault-injection bench envelope whose config declares
 status 1 when they are absent, so a refactor that silently unplugs the
 fault instrumentation fails the ``chaos-smoke`` CI job instead of
 shipping blind.
+
+Serving tripwire: an envelope whose config declares a bucket ladder
+(``buckets``) MUST report ``serve_compiles_total`` no greater than the
+bucket count — more means something compiled at serve time, which is
+exactly the regression the AOT engine exists to prevent (DESIGN.md §14).
+A ``serving_traffic`` envelope missing the counter entirely also fails:
+the always-hot claim would be unverifiable.
 """
 
 from __future__ import annotations
@@ -85,8 +92,10 @@ def main(argv=None) -> int:
             data = json.load(f)
 
     config = {}
+    bench = None
     if "metrics" in data:                      # bench envelope
-        print(f"bench={data.get('bench')} backend={data.get('backend')} "
+        bench = data.get("bench")
+        print(f"bench={bench} backend={data.get('backend')} "
               f"git_rev={data.get('git_rev')}")
         config = data.get("config") or {}
         data = data["metrics"]
@@ -103,6 +112,21 @@ def main(argv=None) -> int:
             print(f"fault injection configured (p_drop="
                   f"{config['p_drop']}) but fault counters missing: "
                   f"{', '.join(missing)}", file=sys.stderr)
+            return 1
+    buckets = config.get("buckets")
+    if buckets:
+        counters = data.get("counters", {})
+        compiles = counters.get("serve_compiles_total")
+        if compiles is None and bench == "serving_traffic":
+            print("serving bench envelope has no serve_compiles_total "
+                  "counter: the zero-serve-time-compiles claim is "
+                  "unverifiable", file=sys.stderr)
+            return 1
+        if compiles is not None and compiles > len(buckets):
+            print(f"serving engine compiled {int(compiles)} executables "
+                  f"for a {len(buckets)}-bucket ladder: something "
+                  f"compiled at serve time (always-hot regression)",
+                  file=sys.stderr)
             return 1
     return 0
 

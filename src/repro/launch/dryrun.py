@@ -40,7 +40,7 @@ from repro.models import build_model, input_specs
 from repro.models.api import Ctx
 from repro.roofline.hlo import collective_bytes_by_kind
 from repro.train.step import make_train_step, shardings_for
-from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.launch.lm_engine import make_prefill_step, make_serve_step
 
 
 def build_ctx(cfg, mesh, mesh_cfg: MeshConfig) -> Ctx:

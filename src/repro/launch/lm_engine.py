@@ -1,6 +1,10 @@
-"""Serving: sharded prefill + single-token decode steps and a small batched
-decode loop (aligned continuous batching: all slots advance together; a
-finished slot is refilled at the next prefill boundary).
+"""LM serving steps: sharded prefill + single-token decode and a small
+batched decode loop (aligned continuous batching: all slots advance
+together; a finished slot is refilled at the next prefill boundary).
+
+Lives under ``repro.launch`` with the other LM drivers — ``repro.serve``
+and ``repro.serving`` are the *matrix-completion* serving namespaces
+(top-k recommendation index/service and the AOT bucket-batched engine).
 
 ``make_serve_step`` is what the ``decode_*`` / ``long_*`` dry-run cells
 lower: (params, cache, token, pos) -> (logits, cache), with the KV cache

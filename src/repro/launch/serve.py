@@ -15,7 +15,7 @@ from repro.config import ARCHS, get_model_config, get_shape
 from repro.launch import mesh as mesh_lib
 from repro.models import build_model
 from repro.models.api import Ctx
-from repro.serve.engine import make_serve_step
+from repro.launch.lm_engine import make_serve_step
 from repro.train.step import shardings_for
 
 

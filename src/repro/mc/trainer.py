@@ -125,6 +125,35 @@ class FitResult:
         return RecommendService(self.to_recommend_index(), batch=batch, k=k,
                                 exclude_seen=exclude_seen, plan=plan)
 
+    def to_engine(self, buckets=None, k: int = 10, exclude_seen: bool = True,
+                  plan=None, refresh_policy=None, trainer=None,
+                  seen_headroom: int = 64):
+        """AOT bucket-batched serving engine over the trained factors
+        (``repro.serving.ServingEngine``, DESIGN.md §14) — every bucket
+        compiled eagerly here, so the first request is already hot.
+
+        ``plan`` defaults like :meth:`to_service`; pass ``trainer`` (plus
+        a ``refresh_policy``) and the engine is bound for policy-driven
+        auto-refit: ``engine.note_append(n, problem)`` runs
+        ``trainer.refit`` and hot-swaps the factors once the policy trips."""
+
+        from repro.serving import DEFAULT_BUCKETS, ServingEngine
+
+        if plan is None:
+            pp = getattr(self.problem, "plan", None)
+            if pp is not None and not pp.is_single_device:
+                plan = pp
+        engine = ServingEngine(
+            self.to_recommend_index(),
+            buckets=buckets if buckets is not None else DEFAULT_BUCKETS,
+            k=k, exclude_seen=exclude_seen, plan=plan,
+            seen_headroom=seen_headroom, refresh_policy=refresh_policy,
+        )
+        engine._fit_result = self
+        if trainer is not None:
+            engine.bind(trainer, self)
+        return engine
+
 
 class Trainer:
     """Runs any ``Schedule`` against any ``CompletionProblem``.

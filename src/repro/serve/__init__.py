@@ -1,3 +1,34 @@
-from repro.serve.engine import make_prefill_step, make_serve_step, ServeLoop
+"""``repro.serve`` — matrix-completion serving: the top-k recommendation
+index and its fixed-batch front end.
 
-__all__ = ["make_prefill_step", "make_serve_step", "ServeLoop"]
+The LM decode scaffolding that used to live here moved to
+``repro.launch.lm_engine`` (it belongs with the other LM drivers); this
+package and ``repro.serving`` (the AOT bucket-batched engine) are
+unambiguously the paper workload's serving namespaces.
+"""
+
+from repro.serve.recommend import (
+    RecommendIndex,
+    RecommendService,
+    ShardedRecommendIndex,
+    build_index,
+    build_seen_table,
+    build_seen_table_coo,
+    recommend_topk,
+    recommend_topk_sharded,
+    score_pairs,
+    shard_index,
+)
+
+__all__ = [
+    "RecommendIndex",
+    "RecommendService",
+    "ShardedRecommendIndex",
+    "build_index",
+    "build_seen_table",
+    "build_seen_table_coo",
+    "recommend_topk",
+    "recommend_topk_sharded",
+    "score_pairs",
+    "shard_index",
+]

@@ -337,9 +337,15 @@ class RecommendService:
     Every ``recommend`` call streams into the ``repro.obs`` registry:
     ``serve_batch_seconds`` (queue-to-answer latency per jitted batch —
     the host-side ``np.asarray`` copy already syncs the device, so the
-    stamp is device-true), ``serve_requests_total`` / ``serve_users_total``
-    / ``serve_batches_total`` counters.  ``metrics()`` summarizes them
-    into p50/p99 latency and QPS (DESIGN.md §12)."""
+    stamp is device-true), ``queue_wait_seconds`` (how long each chunk
+    sat behind earlier chunks of the same call — host wait, kept strictly
+    out of the device-time histogram), ``serve_requests_total`` /
+    ``serve_users_total`` / ``serve_batches_total`` counters.  The very
+    first executed batch pays the jit compile, so it lands in
+    ``serve_warmup_seconds`` + ``serve_warmup_batches_total`` instead of
+    ``serve_batch_seconds`` — steady-state percentiles never mix with
+    compile time.  ``metrics()`` summarizes all of it into p50/p99
+    latency and QPS (DESIGN.md §12)."""
 
     def __init__(self, index: RecommendIndex, batch: int = 256, k: int = 10,
                  exclude_seen: bool = True, plan=None):
@@ -359,6 +365,10 @@ class RecommendService:
         self._t_last: float | None = None
         self._served_users = 0
         self._served_requests = 0
+        # the first batch pays the jit compile: route it to the warmup
+        # histogram so steady-state percentiles stay compile-free.  Sticky
+        # across reset_metrics (the jit cache survives a metrics reset).
+        self._warm = False
 
     @property
     def num_users(self) -> int:
@@ -407,10 +417,14 @@ class RecommendService:
         index = self.index
         sharded = self._sharded
         lat_h = obs.histogram("serve_batch_seconds")
+        t_enter = time.perf_counter()
         if self._t_first is None:
-            self._t_first = time.perf_counter()
+            self._t_first = t_enter
         for s in range(0, n, self.batch):           # universes within a call
             t0 = time.perf_counter()
+            # host-side wait behind this call's earlier chunks — reported
+            # separately so device time and queueing never mix
+            obs.histogram("queue_wait_seconds").observe(t0 - t_enter)
             chunk = user_ids[s : s + self.batch]
             pad = self.batch - len(chunk)
             if pad:
@@ -430,7 +444,13 @@ class RecommendService:
             # is the true queue-to-answer latency of this batch
             out_items[s : s + take] = np.asarray(items)[:take]
             out_scores[s : s + take] = np.asarray(scores)[:take]
-            lat_h.observe(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            if self._warm:
+                lat_h.observe(dt)
+            else:                       # first batch == jit compile
+                obs.histogram("serve_warmup_seconds").observe(dt)
+                obs.counter("serve_warmup_batches_total").inc()
+                self._warm = True
             obs.counter("serve_batches_total").inc()
         self._t_last = time.perf_counter()
         self._served_users += n
@@ -452,10 +472,13 @@ class RecommendService:
         """Latency/throughput summary of everything served so far.
 
         ``latency`` holds the ``serve_batch_seconds`` histogram summary
-        (count/mean/p50/p90/p99, seconds per jitted batch); ``qps`` and
-        ``users_per_s`` divide the served totals by the first-to-last
-        answer window.  All zeros before the first ``recommend`` call or
-        when the registry is disabled."""
+        (count/mean/p50/p90/p99, seconds per jitted batch, **warmup
+        excluded** — the compile-paying first batch reports under
+        ``warmup`` instead); ``queue_wait`` is the host-side chunk wait,
+        separate from device time; ``qps`` and ``users_per_s`` divide the
+        served totals by the first-to-last answer window.  All zeros
+        before the first ``recommend`` call or when the registry is
+        disabled."""
 
         summ = obs.histogram("serve_batch_seconds").summary()
         window = 0.0
@@ -464,6 +487,11 @@ class RecommendService:
         rate = (1.0 / window) if window > 0 else 0.0
         return {
             "latency": summ,
+            "queue_wait": obs.histogram("queue_wait_seconds").summary(),
+            "warmup": {
+                "batches": obs.counter("serve_warmup_batches_total").value,
+                "seconds": obs.histogram("serve_warmup_seconds").summary(),
+            },
             "requests": self._served_requests,
             "users": self._served_users,
             "qps": self._served_requests * rate,

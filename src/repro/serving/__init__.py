@@ -1,0 +1,24 @@
+"""``repro.serving`` — the production serving engine for the completed
+matrix: AOT-compiled, bucket-batched, always-hot (DESIGN.md §14).
+
+``repro.serve`` holds the index and the jitted query
+(``recommend_topk``); this package wraps them in an MLPerf-style request
+path — a :class:`BucketLadder` of batch shapes, one eagerly-compiled
+executable per bucket (:func:`compile_buckets`), a queue + worker thread
+returning futures, and a :class:`ServingEngine` facade with hot factor
+refresh (:class:`RefreshPolicy` for auto-refit) and ``repro.obs``
+metrics.  Bench: ``benchmarks/serving_traffic.py``; tutorial:
+``docs/serving.md``.
+"""
+
+from repro.serving.buckets import DEFAULT_BUCKETS, BucketLadder
+from repro.serving.compiler import compile_buckets
+from repro.serving.engine import RefreshPolicy, ServingEngine
+
+__all__ = [
+    "BucketLadder",
+    "DEFAULT_BUCKETS",
+    "RefreshPolicy",
+    "ServingEngine",
+    "compile_buckets",
+]

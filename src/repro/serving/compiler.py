@@ -1,0 +1,84 @@
+"""Per-bucket AOT compilation of the score+mask+top-k serving program.
+
+``RecommendService`` relies on jit-on-first-call: the first request of a
+shape pays the compile *inside* its latency.  The engine instead lowers
+and compiles every bucket's executable **eagerly at startup** via
+``jax.jit(...).lower(...).compile()``, so no request ever waits on XLA:
+
+* unsharded: the executable IS the compiled form of
+  ``serve.recommend.recommend_topk`` — same jitted function, same HLO —
+  so engine results are bit-identical to the jit path (pinned in
+  ``tests/test_serving_engine.py``);
+* sharded (a ``MeshPlan`` given): the executable is the compiled
+  two-stage ``shard_map`` query from ``serve.recommend``'s
+  ``_make_sharded_topk`` — the item axis lives across the plan's devices
+  and the merge is exact (DESIGN.md §5).
+
+Factor buffers are *arguments* of the executables, not captured
+constants: ``ServingEngine.refresh`` swaps in new (u, w, seen) arrays of
+the same shapes/shardings and every compiled program keeps running — the
+always-hot property.  Every compile increments ``serve_compiles_total``
+(plus a per-bucket labeled counter); after startup that counter must
+never move — the ``serving-smoke`` CI job and the ``obs_report.py``
+tripwire both pin ``serve_compiles_total == len(buckets)``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import obs
+from repro.serve.recommend import (RecommendIndex, _make_sharded_topk,
+                                   recommend_topk)
+from repro.serving.buckets import BucketLadder
+
+
+def compile_buckets(
+    index: RecommendIndex,
+    ladder: BucketLadder,
+    k: int,
+    exclude_seen: bool,
+    plan=None,
+    sharded_index=None,
+) -> Dict[int, Callable]:
+    """Eagerly compile one executable per bucket; returns {bucket: run}.
+
+    Each ``run(index_like, user_ids)`` takes the *current* factor buffers
+    — a ``RecommendIndex`` (unsharded) or a ``ShardedRecommendIndex``
+    (``plan`` given, built by the caller via ``shard_index``) — plus a
+    padded (bucket,)-shaped int32 user array, and returns (items, scores)
+    of shape (bucket, k).  Compilation happens here, at call time never.
+    """
+
+    if plan is not None and sharded_index is None:
+        raise ValueError("plan given without its sharded index")
+    executables: Dict[int, Callable] = {}
+    for bucket in ladder.sizes:
+        users = jnp.zeros((bucket,), jnp.int32)
+        if plan is None:
+            ex = recommend_topk.lower(
+                index, users, k=k, exclude_seen=exclude_seen
+            ).compile()
+
+            def run(idx, user_ids, _ex=ex):
+                return _ex(idx, user_ids)
+        else:
+            rep = plan.sharding(P())
+            fn = _make_sharded_topk(plan, k, exclude_seen,
+                                    sharded_index.num_items,
+                                    sharded_index.shard_items)
+            sidx = sharded_index.index
+            ex = fn.lower(sidx.u, sidx.w, sidx.seen,
+                          jax.device_put(users, rep)).compile()
+
+            def run(sidx, user_ids, _ex=ex, _rep=rep):
+                i = sidx.index
+                return _ex(i.u, i.w, i.seen, jax.device_put(user_ids, _rep))
+        executables[bucket] = run
+        obs.counter("serve_compiles_total").inc()
+        obs.counter("serve_bucket_compiles_total", bucket=str(bucket)).inc()
+    return executables

@@ -358,11 +358,19 @@ def test_service_latency_histogram_and_qps():
     assert snap["counters"]["serve_requests_total"] == 1.0
     assert snap["counters"]["serve_users_total"] == 20.0
     assert snap["counters"]["serve_batches_total"] == 3.0
-    assert snap["histograms"]["serve_batch_seconds"]["count"] == 3
+    # the first batch pays the jit compile and is routed to the warmup
+    # histogram — steady-state latency holds only the other two batches
+    assert snap["counters"]["serve_warmup_batches_total"] == 1.0
+    assert snap["histograms"]["serve_warmup_seconds"]["count"] == 1
+    assert snap["histograms"]["serve_batch_seconds"]["count"] == 2
+    assert snap["histograms"]["queue_wait_seconds"]["count"] == 3
 
     m = svc.metrics()
-    assert m["latency"]["count"] == 3
+    assert m["latency"]["count"] == 2
     assert m["latency"]["p99"] >= m["latency"]["p50"] > 0.0
+    assert m["warmup"]["batches"] == 1.0
+    assert m["warmup"]["seconds"]["count"] == 1
+    assert m["queue_wait"]["count"] == 3
     assert m["requests"] == 1 and m["users"] == 20
     assert m["qps"] > 0.0 and m["users_per_s"] > 0.0
 

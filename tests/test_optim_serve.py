@@ -74,7 +74,7 @@ def test_serve_loop_greedy_matches_manual_decode():
     ctx = Ctx(attn_impl="ref", cache_dtype=jnp.float32)
     model = build_model(cfg, ctx)
     params = model.init(jax.random.PRNGKey(0))
-    from repro.serve.engine import ServeLoop
+    from repro.launch.lm_engine import ServeLoop
 
     B, L, T = 2, 8, 6
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, L), 0,

@@ -29,6 +29,12 @@ bucket count — more means something compiled at serve time, which is
 exactly the regression the AOT engine exists to prevent (DESIGN.md §14).
 A ``serving_traffic`` envelope missing the counter entirely also fails:
 the always-hot claim would be unverifiable.
+
+Async tripwire: an envelope whose config declares the non-blocking
+regime (``async_rounds`` true, or ``exchange_every > 1``) MUST carry the
+planned-staleness counters (``gossip_skipped_exchanges_total`` /
+``gossip_stale_rounds_total``) — exit status 1 when they are absent, so
+the exact skip accounting (DESIGN.md §15) can't silently unplug.
 """
 
 from __future__ import annotations
@@ -112,6 +118,16 @@ def main(argv=None) -> int:
             print(f"fault injection configured (p_drop="
                   f"{config['p_drop']}) but fault counters missing: "
                   f"{', '.join(missing)}", file=sys.stderr)
+            return 1
+    if config.get("async_rounds") or int(config.get("exchange_every") or 1) > 1:
+        counters = data.get("counters", {})
+        missing = [k for k in ("gossip_skipped_exchanges_total",
+                               "gossip_stale_rounds_total")
+                   if k not in counters]
+        if missing:
+            print(f"async gossip configured (exchange_every="
+                  f"{config.get('exchange_every')}) but planned-staleness "
+                  f"counters missing: {', '.join(missing)}", file=sys.stderr)
             return 1
     buckets = config.get("buckets")
     if buckets:

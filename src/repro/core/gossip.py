@@ -27,6 +27,20 @@ data.  Fault decisions are pure functions of ``(key, round, edge)``
 (pinned by test).  Drop/stale/straggle counts accumulate in the carry
 (``FaultStats``) for the ``Gossip`` schedule to stream into ``repro.obs``.
 
+Asynchronous stochastic rounds (``async_rounds=True``, DESIGN.md §15): the
+NOMAD-style non-blocking regime.  Halo exchange happens only every
+``exchange_every``-th round; in between each block updates against its
+neighbours' last *received* halos while ``HaloState.age`` counts the
+rounds since each receive — planned staleness rides the exact same
+age/gate machinery as faults, so the two compose (a dropped exchange just
+extends the age run until the next successful one, bounded by
+``max_staleness``).  ``batch=`` additionally makes each round's
+f-gradients stochastic: the step consumes a per-round minibatch store plus
+the ``minibatch_grad_scale`` correction (nnz/batch per block), so a round
+costs O(batch) instead of O(nnz) per device.  With ``exchange_every=1,
+max_staleness=0, batch=None`` the async step is bit-identical to the
+synchronous one (pinned by test).
+
 Every step here lowers to: 4 collective-permutes of (edge × r) floats +
 purely local compute.  That is the paper's communication pattern, verbatim.
 """
@@ -59,8 +73,10 @@ class HaloState(NamedTuple):
     so zero-initialized halos can never pull a seam toward zero).  Lanes
     follow ``repro.faults.DIRECTIONS`` order; the array is shaped on the
     block grid ``(p, q, 4)`` so it shards exactly like the factor stacks
-    and ``init_carry`` needs no device count.  Ages only move under a
-    ``FaultPlan`` — the fault-free path threads them through untouched."""
+    and ``init_carry`` needs no device count.  Ages move under a
+    ``FaultPlan`` (missed refreshes) and under ``async_rounds`` (planned
+    exchange skipping counts rounds-since-receive) — the plain synchronous
+    path threads them through untouched."""
 
     left_u: jax.Array    # left neighbour's last block-col U   (pl, mb, r)
     right_u: jax.Array   # right neighbour's first block-col U (pl, mb, r)
@@ -150,10 +166,16 @@ def exchange_halos(U, W, row_axes, col_axes, compression="none",
 
 def _local_gradients(problem: Problem, U, W, halos: HaloState,
                      row_axes, col_axes, rho, lam, use_kernel=False,
-                     method="segment", chunk=None, gates=None):
+                     method="segment", chunk=None, gates=None,
+                     f_scale=None):
     """∇L on the local tile, seam terms from halos, boundaries masked.
 
-    ``gates`` (fault path only): 4 scalar bools in DIRECTIONS order —
+    ``f_scale`` (minibatch rounds): per-block factor multiplying only the
+    f-part of the gradient — ``minibatch_grad_scale`` hands nnz/batch so
+    the stochastic gradient is an unbiased estimate of the full one.  The
+    consensus/regularization terms are deterministic and stay unscaled.
+
+    ``gates`` (fault/async path only): 4 scalar bools in DIRECTIONS order —
     edge-exists AND halo-age within ``max_staleness``.  A gated-off seam
     contributes nothing: the block degrades to its local-only gradient
     instead of pulling toward stale/never-received data.  Gating
@@ -171,7 +193,8 @@ def _local_gradients(problem: Problem, U, W, halos: HaloState,
     # full_gradient_step? No: damping is applied by the caller via step
     # scale; here we produce the exact ∇L of the local restriction.
     gU, gW = full_gradients(problem, U, W, rho=rho, lam=lam,
-                            use_kernel=use_kernel, method=method, chunk=chunk)
+                            use_kernel=use_kernel, method=method, chunk=chunk,
+                            f_scale=f_scale)
 
     c = jax.lax.axis_index(col_axes)
     r_ = jax.lax.axis_index(row_axes)
@@ -219,6 +242,9 @@ def make_gossip_step(
     chunk: int | None = None,
     faults=None,
     max_staleness: int = 3,
+    async_rounds: bool = False,
+    exchange_every: int = 1,
+    batch: int | None = None,
 ):
     """Build the jitted distributed gossip round.
 
@@ -247,9 +273,51 @@ def make_gossip_step(
     ``faults=None`` the legacy code path runs verbatim (bit-identical).
     Faults + compression is rejected: dropping a compressed message after
     its error-feedback residual update would corrupt the EF invariant.
+
+    ``async_rounds=True`` is the NOMAD-style non-blocking regime
+    (DESIGN.md §15): exchanges fire only when ``carry.rnd %
+    exchange_every == 0`` (keyed on the *absolute* round, so chunked calls
+    and checkpoint resume see the same schedule) and skipped rounds
+    compute against the last received halos with ``HaloState.age``
+    counting every round since the receive — planned skips age exactly
+    like fault drops, and both compose (``faults=`` draws its events on
+    exchange rounds only).  A direction past ``max_staleness`` gates its
+    seam out.  ``exchange_every=1, max_staleness=0`` is bit-identical to
+    the synchronous step (pinned by test).
+
+    ``batch=<int>`` makes the round stochastic: the step's signature
+    becomes ``step_fn(problem, f_scale, carry)`` where ``problem`` is a
+    per-round minibatch store (``MinibatchStream.batch_at``) and
+    ``f_scale`` is the ``minibatch_grad_scale`` of the *full* store —
+    (p, q) nnz/batch, sharded like the grid — making the stochastic
+    f-gradient unbiased.  Requires ``layout="sparse"`` and
+    ``steps_per_call=1`` (each round consumes a fresh minibatch).
     """
 
     p, q = spec_pq
+    if exchange_every < 1:
+        raise ValueError(f"exchange_every must be >= 1, got {exchange_every}")
+    if async_rounds and staleness != 1:
+        raise ValueError(
+            "async_rounds replaces the synchronous staleness schedule with "
+            "exchange_every; leave staleness=1"
+        )
+    if not async_rounds and exchange_every != 1:
+        raise ValueError(
+            "exchange_every > 1 is the asynchronous regime; set "
+            "async_rounds=True (synchronous halo reuse is staleness=k)"
+        )
+    if batch is not None:
+        if layout != "sparse":
+            raise ValueError(
+                "minibatch gossip (batch=) needs the sparse layout: the "
+                "minibatch is a sampled sparse store"
+            )
+        if steps_per_call != 1:
+            raise ValueError(
+                "minibatch gossip consumes one sampled store per round; "
+                "steps_per_call must be 1"
+            )
     if faults is not None and compression != "none":
         raise ValueError(
             "faults cannot be combined with message compression: a dropped "
@@ -269,7 +337,8 @@ def make_gossip_step(
     rho, lam, a, b = cfg.rho, cfg.lam, cfg.a, cfg.b
     n_struct = 2 * (p - 1) * (q - 1)
 
-    def local_round(problem: Problem, carry: GossipCarry, step_i) -> GossipCarry:
+    def local_round(problem: Problem, carry: GossipCarry, step_i,
+                    f_scale=None) -> GossipCarry:
         state, prev = carry.state, carry.halos
         ef = {
             "u_last": carry.ef_u_last, "u_first": carry.ef_u_first,
@@ -289,20 +358,31 @@ def make_gossip_step(
         def keep(_):
             return prev, tuple(ef.values())
 
-        is_refresh = step_i % staleness == 0
+        if async_rounds:
+            # the absolute round is the clock: chunked calls and resumed
+            # fits land on the same exchange schedule
+            is_refresh = carry.rnd % exchange_every == 0
+        else:
+            is_refresh = step_i % staleness == 0
         halos, ef_vals = jax.lax.cond(is_refresh, refresh, keep, operand=None)
 
         stats = carry.stats
         gates = None
-        if faults is not None:
+        if faults is not None or async_rounds:
             c = jax.lax.axis_index(col_axes)
             r_ = jax.lax.axis_index(row_axes)
             dc = _axis_size(col_axes)
             dr = _axis_size(row_axes)
             # which of my 4 halo directions have a real neighbour
             exists = jnp.stack([c > 0, c < dc - 1, r_ > 0, r_ < dr - 1])
-            # fault decisions keyed on the *receiver* device's linear index
-            drops, straggles = faults.edge_events(carry.rnd, r_ * dc + c)
+            if faults is not None:
+                # fault decisions keyed on the *receiver* device's linear
+                # index, drawn on exchange rounds only (async skips are
+                # planned, not faults — no events burn on them)
+                drops, straggles = faults.edge_events(carry.rnd, r_ * dc + c)
+            else:
+                drops = jnp.zeros((4,), bool)
+                straggles = jnp.zeros((4,), bool)
             # straggler = late message: for this synchronous simulation the
             # receiver reuses the stale halo exactly like a drop, but the
             # event is accounted separately (and costed by the bench via
@@ -310,21 +390,32 @@ def make_gossip_step(
             arrived = is_refresh & ~(drops | straggles)
             fresh = (halos.left_u, halos.right_u, halos.up_w, halos.down_w)
             stale = (prev.left_u, prev.right_u, prev.up_w, prev.down_w)
-            inject = faults.nan_event(carry.rnd)
             merged, ages = [], []
             for d in range(4):
                 v = jnp.where(arrived[d], fresh[d], stale[d])
-                if faults.nan_at is not None:
+                if faults is not None and faults.nan_at is not None:
+                    inject = faults.nan_event(carry.rnd)
                     v = jnp.where(inject & exists[d],
                                   jnp.full_like(v, jnp.nan), v)
-                # age: reset on receive, saturating +1 per missed refresh,
-                # frozen on planned keep rounds (those are not faults)
-                a_d = jnp.where(
-                    arrived[d], 0,
-                    jnp.where(is_refresh,
-                              jnp.minimum(prev.age[..., d] + 1, AGE_NEVER),
-                              prev.age[..., d]),
-                )
+                if async_rounds:
+                    # age counts rounds-since-receive: planned skips age
+                    # exactly like fault drops (NOMAD staleness semantics),
+                    # so with exchange_every=e and no faults age = rnd % e
+                    a_d = jnp.where(
+                        arrived[d], 0,
+                        jnp.minimum(prev.age[..., d] + 1, AGE_NEVER),
+                    )
+                else:
+                    # age: reset on receive, saturating +1 per missed
+                    # refresh, frozen on planned keep rounds (those are
+                    # not faults)
+                    a_d = jnp.where(
+                        arrived[d], 0,
+                        jnp.where(is_refresh,
+                                  jnp.minimum(prev.age[..., d] + 1,
+                                              AGE_NEVER),
+                                  prev.age[..., d]),
+                    )
                 merged.append(v)
                 ages.append(a_d)
             age = jnp.stack(ages, axis=-1)
@@ -351,7 +442,7 @@ def make_gossip_step(
         gU, gW = _local_gradients(
             problem, state.U, state.W, halos, row_axes, col_axes,
             rho=rho * 0.5, lam=lam, use_kernel=use_kernel,
-            method=method, chunk=chunk, gates=gates,
+            method=method, chunk=chunk, gates=gates, f_scale=f_scale,
         )
         lr = obj.gamma(state.t.astype(jnp.float32), a, b)
         new_state = State(state.U - lr * gU, state.W - lr * gW,
@@ -365,6 +456,12 @@ def make_gossip_step(
 
         carry, _ = jax.lax.scan(body, carry, jnp.arange(steps_per_call))
         return carry
+
+    def shard_body_minibatch(problem: Problem, f_scale,
+                             carry: GossipCarry) -> GossipCarry:
+        # one sampled store per round: no scan, the schedule feeds a fresh
+        # minibatch (and the same full-store nnz/batch scale) every call
+        return local_round(problem, carry, jnp.asarray(0), f_scale=f_scale)
 
     # every placement decision reads the plan: store leaves and factor
     # stacks shard on their leading (p, q) axes, halos/error-feedback on
@@ -381,16 +478,39 @@ def make_gossip_step(
     carry_spec = GossipCarry(state_spec, halo_spec, re_, re_, ce, ce,
                              P(), FaultStats(pspec2, pspec2, pspec2))
 
+    if batch is not None:
+        in_specs = (problem_spec, pspec2, carry_spec)
+        body_fn = shard_body_minibatch
+    else:
+        in_specs = (problem_spec, carry_spec)
+        body_fn = shard_body
     step = jax.jit(
         _shard_map(
-            shard_body,
+            body_fn,
             mesh=mesh,
-            in_specs=(problem_spec, carry_spec),
+            in_specs=in_specs,
             out_specs=carry_spec,
             check_vma=False,
         )
     )
     return step, (problem_spec, carry_spec)
+
+
+def exchange_rounds_in(start: int, n: int, exchange_every: int = 1) -> int:
+    """How many of rounds ``[start, start + n)`` actually exchange halos.
+
+    The async schedule fires an exchange when ``rnd % exchange_every == 0``
+    (absolute round — ``make_gossip_step``'s clock), so this is exact, not
+    an ``n / exchange_every`` amortization: the ``Gossip`` schedule uses it
+    to account ``train_gossip_halo_bytes_total`` and
+    ``gossip_skipped_exchanges_total`` per chunk with no rounding drift."""
+
+    if exchange_every == 1:
+        return n
+    first = -(-start // exchange_every) * exchange_every
+    if first >= start + n:
+        return 0
+    return (start + n - 1 - first) // exchange_every + 1
 
 
 def halo_bytes_per_round(plan: MeshPlan, mb: int, nb: int, r: int,

@@ -96,20 +96,27 @@ def full_gradients(
     problem: Problem | SparseProblem, U: jax.Array, W: jax.Array, *,
     rho: float, lam: float, use_kernel: bool = False,
     method: str = "segment", chunk: int | None = None,
+    f_scale: jax.Array | None = None,
 ):
     """∇L of the collapsed objective (objective.full_objective).
 
     Accepts either layout; a SparseProblem routes the f-part through the
-    nnz-proportional SDDMM path with identical consensus/reg terms."""
+    nnz-proportional SDDMM path with identical consensus/reg terms.
+    ``f_scale`` (per-block, shape (p, q)) multiplies only the f-part —
+    the minibatch unbiasedness correction (``minibatch_grad_scale``);
+    ``None`` leaves the expression untouched (bit-identical)."""
 
     if isinstance(problem, SparseProblem):
         return sparse_obj.full_gradients_sparse(
             problem, U, W, rho=rho, lam=lam, use_kernel=use_kernel,
-            method=method, chunk=chunk,
+            method=method, chunk=chunk, f_scale=f_scale,
         )
     _, gu_f, gw_f = jax.vmap(jax.vmap(
         lambda x, m, u, w: obj.f_grads(x, m, u, w, use_kernel=use_kernel)
     ))(problem.xb, problem.maskb, U, W)
+    if f_scale is not None:
+        gu_f = gu_f * f_scale[..., None, None]
+        gw_f = gw_f * f_scale[..., None, None]
     # consensus stencil shared with the sparse path (sparse.objective)
     gU = gu_f + 2.0 * lam * U + 2.0 * rho * sparse_obj.consensus_pulls(U, axis=1)
     gW = gw_f + 2.0 * lam * W + 2.0 * rho * sparse_obj.consensus_pulls(W, axis=0)

@@ -148,7 +148,28 @@ class Gossip(Schedule):
     gradient, and per-chunk fault counts stream into the obs registry
     (``gossip_edges_dropped_total``, ``gossip_stale_rounds_total``,
     ``gossip_straggled_edges_total``, ``gossip_halo_age``).  With
-    ``faults=None`` the legacy step runs verbatim — bit-identical."""
+    ``faults=None`` the legacy step runs verbatim — bit-identical.
+
+    ``batch=<int>`` switches to stochastic rounds (DESIGN.md §15): every
+    round samples a fresh per-block minibatch via a restart-exact
+    ``MinibatchStream`` (stream base derived from the fit key, per-round
+    key = fold_in(base, absolute round) — a killed-and-resumed fit replays
+    the identical entry stream) and feeds it to the step with the
+    ``minibatch_grad_scale`` unbiasedness correction, so a round costs
+    O(batch) per device instead of O(nnz).  Requires the sparse layout.
+    ``batch_seed=`` overrides the stream base with a fixed seed.
+
+    ``async_rounds=True`` is the NOMAD-style non-blocking regime: halo
+    exchange fires every ``exchange_every``-th round only; skipped rounds
+    run on the last *received* halos with ``HaloState.age`` counting
+    rounds-since-receive, bounded by ``max_staleness`` (past it the seam
+    gates out).  Planned skips and ``faults=`` compose on the same
+    age/gate machinery.  Wire-byte and stale/skip accounting is exact:
+    ``train_gossip_halo_bytes_total`` counts only rounds that exchanged,
+    and ``gossip_skipped_exchanges_total`` / ``gossip_stale_rounds_total``
+    stream the skipped-exchange and stale-round counts per chunk.  With
+    ``exchange_every=1, max_staleness=0, batch=None`` the async step is
+    bit-identical to the synchronous one (pinned by test)."""
 
     num_rounds: int = 200
     eval_every: int = 0
@@ -161,6 +182,10 @@ class Gossip(Schedule):
     topk_fraction: float = 0.25
     faults: Any = None
     max_staleness: int = 3
+    batch: Optional[int] = None
+    batch_seed: Optional[int] = None
+    async_rounds: bool = False
+    exchange_every: int = 1
 
     name = "gossip"
     units = "rounds"
@@ -185,6 +210,11 @@ class Gossip(Schedule):
 
         eng = problem.engine
         plan = self._plan(problem)
+        if self.batch is not None and problem.layout != "sparse":
+            raise ValueError(
+                "Gossip(batch=) needs layout='sparse': stochastic rounds "
+                "sample the sparse store"
+            )
         if state is None:
             key, ik = jax.random.split(key)
             state = init_state(ik, problem.spec)
@@ -194,21 +224,46 @@ class Gossip(Schedule):
         eval_every = self.eval_every or self.num_rounds
         steps: dict[int, Any] = {}
 
-        # exact comm accounting from the plan's edge specs: what one round
-        # moves over the wires (0 on a 1x1 plan — no wires, no bytes)
+        stream = scale = None
+        if self.batch is not None:
+            from repro.sparse.store import (MinibatchStream,
+                                            minibatch_grad_scale)
+
+            # the stream base is a pure function of the fit key (post
+            # init-split — exactly what Checkpoint saves), so a resumed
+            # fit replays the identical per-round minibatches; the plan
+            # path keys blocks by global id => mesh-shape invariant
+            base = (jax.random.PRNGKey(self.batch_seed)
+                    if self.batch_seed is not None
+                    else jax.random.fold_in(key, 0x0b_a7c4))
+            stream = MinibatchStream(problem.data, self.batch, seed=base,
+                                     plan=plan)
+            scale = jax.device_put(
+                minibatch_grad_scale(problem.data, self.batch),
+                plan.sharding(plan.grid_spec),
+            )
+
+        # exact comm accounting from the plan's edge specs: what one
+        # exchange moves over the wires (0 on a 1x1 plan — no wires, no
+        # bytes); per chunk only the rounds that actually exchanged count
         spec = problem.spec
-        round_bytes = core_gossip.halo_bytes_per_round(
+        exchange_bytes = core_gossip.halo_bytes_per_round(
             plan, spec.mb, spec.nb, spec.r, self.compression,
-        )["total_bytes"] / max(self.staleness, 1)
+        )["total_bytes"]
+        stride = self.exchange_every if self.async_rounds \
+            else max(self.staleness, 1)
         rounds_c = obs.counter("train_gossip_rounds_total")
         bytes_c = obs.counter("train_gossip_halo_bytes_total")
         round_h = obs.histogram("train_gossip_round_seconds")
-        if self.faults is not None:
+        track_stats = self.faults is not None or self.async_rounds
+        if track_stats:
             dropped_c = obs.counter("gossip_edges_dropped_total")
             stale_c = obs.counter("gossip_stale_rounds_total")
             strag_c = obs.counter("gossip_straggled_edges_total")
             age_h = obs.histogram("gossip_halo_age")
             seen = (0, 0, 0)
+        if self.async_rounds:
+            skipped_c = obs.counter("gossip_skipped_exchanges_total")
 
         def step_for(n: int):
             if n not in steps:
@@ -219,6 +274,8 @@ class Gossip(Schedule):
                     use_kernel=eng.use_kernel, steps_per_call=n,
                     layout=problem.layout, method=eng.method, chunk=eng.chunk,
                     faults=self.faults, max_staleness=self.max_staleness,
+                    async_rounds=self.async_rounds,
+                    exchange_every=self.exchange_every, batch=self.batch,
                 )
             return steps[n]
 
@@ -227,11 +284,34 @@ class Gossip(Schedule):
         while rd < self.num_rounds:
             n = min(eval_every - rd % eval_every, self.num_rounds - rd)
             with obs.span("gossip.rounds") as sp:
-                carry = sp.outputs(step_for(n)(problem.data, carry))
+                if stream is None:
+                    carry = sp.outputs(step_for(n)(problem.data, carry))
+                else:
+                    # stochastic rounds: one sampled store per round, keyed
+                    # on the absolute round (restart-exact replay).  Each
+                    # round blocks before the next dispatch: the step
+                    # carries collectives, and XLA-CPU's rendezvous can
+                    # deadlock when several in-flight executions of a
+                    # collective program interleave (the scan path never
+                    # sees this — all its rounds share one execution)
+                    step = step_for(1)
+                    for t in range(rd, rd + n):
+                        carry = step(stream.batch_at(t), scale, carry)
+                        jax.block_until_ready(carry.state.t)
+                    carry = sp.outputs(carry)
             rounds_c.inc(n)
-            bytes_c.inc(n * round_bytes)
+            if self.async_rounds:
+                # exchange fires on absolute rounds rnd % exchange_every
+                # == 0 — count the chunk's exchange rounds exactly
+                n_ex = core_gossip.exchange_rounds_in(rd, n,
+                                                      self.exchange_every)
+                skipped_c.inc(n - n_ex)
+            else:
+                # the sync staleness clock restarts per chunked call
+                n_ex = core_gossip.exchange_rounds_in(0, n, stride)
+            bytes_c.inc(n_ex * exchange_bytes)
             round_h.observe(sp.seconds / n)
-            if self.faults is not None:
+            if track_stats:
                 # carry stats are cumulative device-side; diff per chunk so
                 # counters stream monotonically during the fit
                 tot = tuple(int(np.asarray(x).sum()) for x in carry.stats)

@@ -194,7 +194,12 @@ class Trainer:
         ``num_rounds=500``) are applied either way.  ``resume_from``
         restarts from the latest session checkpoint written by the
         :class:`Checkpoint` callback (state + PRNG key + progress unit),
-        replaying the exact stream of the uninterrupted run.
+        replaying the exact stream of the uninterrupted run — including
+        the per-round minibatch stream of a stochastic
+        ``Gossip(batch=...)`` fit, whose ``MinibatchStream`` base is a
+        pure function of the saved key and whose per-round sample is
+        keyed on the absolute round (bit-identical resume, pinned by
+        test).
 
         ``recovery=RecoveryPolicy(...)`` makes the fit self-healing
         (DESIGN.md §13): a ``DivergenceGuard`` watches every eval

@@ -128,15 +128,23 @@ def consensus_pulls(A: jax.Array, axis: int) -> jax.Array:
 def full_gradients_sparse(
     sp: SparseProblem, U: jax.Array, W: jax.Array, *,
     rho: float, lam: float, use_kernel: bool = False, method: str = "segment",
-    chunk: int | None = None,
+    chunk: int | None = None, f_scale: jax.Array | None = None,
 ):
-    """∇L of the collapsed objective, f-part from the sparse store."""
+    """∇L of the collapsed objective, f-part from the sparse store.
+
+    ``f_scale`` (per-block (p, q), minibatch rounds) multiplies only the
+    f-part: with ``sp`` a sampled minibatch and ``f_scale = nnz/batch`` of
+    the full store the stochastic gradient is unbiased; the consensus and
+    regularization terms are deterministic and stay unscaled."""
 
     _, gu_f, gw_f = jax.vmap(jax.vmap(
         lambda entries, u, w: f_grads_sparse(
             entries, u, w, use_kernel=use_kernel, method=method, chunk=chunk,
         )
     ))(sp.entries, U, W)
+    if f_scale is not None:
+        gu_f = gu_f * f_scale[..., None, None]
+        gw_f = gw_f * f_scale[..., None, None]
     gU = gu_f + 2.0 * lam * U + 2.0 * rho * consensus_pulls(U, axis=1)
     gW = gw_f + 2.0 * lam * W + 2.0 * rho * consensus_pulls(W, axis=0)
     return gU, gW

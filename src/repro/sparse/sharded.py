@@ -340,6 +340,14 @@ class ShardedEntries:
 
 
 @functools.lru_cache(maxsize=None)
+def _gid_table(p: int, q: int):
+    """Memoized (p, q) global-block-id table — the per-block fold_in keys'
+    second operand; built once per grid shape, not per sample call."""
+
+    return jnp.arange(p * q, dtype=jnp.uint32).reshape(p, q)
+
+
+@functools.lru_cache(maxsize=None)
 def _make_shard_sampler(plan: MeshPlan, batch: int, E: int, mb: int, nb: int):
     """Compiled shard-local sampler: each device draws its own blocks'
     minibatches with fold_in(step_key, global_block_id) keys."""
@@ -384,9 +392,7 @@ def sample_minibatch_sharded(key: jax.Array, sharded: ShardedEntries,
     a pure function of (seed, step): restart-exact across hosts."""
 
     sp, plan = sharded.sp, sharded.plan
-    gids = jnp.arange(plan.p * plan.q, dtype=jnp.uint32).reshape(
-        plan.p, plan.q
-    )
+    gids = _gid_table(plan.p, plan.q)
     fn = _make_shard_sampler(plan, batch, sp.capacity, sp.mb, sp.nb)
     return fn(sp, gids, key)
 

@@ -637,6 +637,9 @@ class MinibatchStream:
     """Stateless (step -> minibatch) sampler, mirroring LMTokenPipeline's
     restart-exact contract: ``batch_at(step)`` is a pure function of
     (seed, step), so checkpoint resume replays the identical entry stream.
+    ``seed`` takes an int or a ready PRNG key (the ``Gossip`` schedule
+    derives the stream base from its fit key so resumed stochastic fits
+    replay the identical minibatches).
 
     Mesh-aware mode: pass a ``repro.mesh.MeshPlan`` and the store is
     placed onto its owners once, after which every ``batch_at`` samples
@@ -647,25 +650,51 @@ class MinibatchStream:
     stream is identical for every mesh shape (host-count invariant) and
     stays restart-exact; no host ever materializes another host's
     entries.  ``plan=None`` keeps the original single-host sampler
-    bit-for-bit (split-based keys)."""
+    bit-for-bit (split-based keys).
 
-    def __init__(self, sp: SparseProblem, batch: int, seed: int = 0,
-                 plan=None):
+    All per-block setup — flattened entry views, the gid table, the
+    compiled sampler — is memoized at construction: ``batch_at`` inside a
+    fit loop is one fold_in plus one cached jitted call, no repeated
+    host-side derivation (the fit-loop hot path)."""
+
+    def __init__(self, sp: SparseProblem, batch: int, seed=0, plan=None):
         self.sp = sp
         self.batch = batch
         self.seed = seed
         self.plan = plan
-        self._base = jax.random.PRNGKey(seed)
+        self._base = (seed if isinstance(seed, jax.Array)
+                      else jax.random.PRNGKey(seed))
         self._sharded = None
+        p, q, _ = sp.rows.shape
         if plan is not None:
-            from repro.sparse.sharded import ShardedEntries  # avoid cycle
+            from repro.sparse.sharded import (  # avoid cycle
+                ShardedEntries, _gid_table, _make_shard_sampler,
+            )
 
             self._sharded = ShardedEntries.from_problem(sp, plan)
+            self._gids = _gid_table(plan.p, plan.q)
+            self._fn = _make_shard_sampler(plan, batch, sp.capacity,
+                                           sp.mb, sp.nb)
+        else:
+            mb, nb = sp.mb, sp.nb
+            # pre-flattened block views + one compiled sampler: the exact
+            # ops of sample_minibatch, with the per-call reshapes and
+            # partial re-derivation hoisted out of the fit loop
+            self._flat = (
+                sp.rows.reshape(p * q, -1), sp.cols.reshape(p * q, -1),
+                sp.vals.reshape(p * q, -1), sp.nnz.reshape(p * q),
+            )
+            one = functools.partial(_sample_block, batch=batch, mb=mb, nb=nb)
+
+            def sample(key, rows2, cols2, vals2, nnz1, nnz2):
+                keys = jax.random.split(key, p * q)
+                parts = jax.vmap(one)(keys, rows2, cols2, vals2, nnz1)
+                return _assemble_batch(parts, p, q, batch, mb, nb, nnz2)
+
+            self._fn = jax.jit(sample)
 
     def batch_at(self, step: int) -> SparseProblem:
         key = jax.random.fold_in(self._base, step)
         if self._sharded is not None:
-            from repro.sparse.sharded import sample_minibatch_sharded
-
-            return sample_minibatch_sharded(key, self._sharded, self.batch)
-        return sample_minibatch(key, self.sp, self.batch)
+            return self._fn(self._sharded.sp, self._gids, key)
+        return self._fn(key, *self._flat, self.sp.nnz)

@@ -54,7 +54,7 @@ def test_design_section_references_resolve():
 def test_docs_suite_exists_and_readme_links_it():
     readme = (ROOT / "README.md").read_text()
     for name in ("architecture.md", "api.md", "streaming.md",
-                 "observability.md", "robustness.md"):
+                 "observability.md", "robustness.md", "async.md"):
         assert (ROOT / "docs" / name).exists(), f"docs/{name} missing"
         assert f"docs/{name}" in readme, f"README does not link docs/{name}"
 

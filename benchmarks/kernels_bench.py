@@ -46,6 +46,55 @@ def bench_masked_factor_grad(out=print):
             f"vmem_kb={vmem//1024};intensity={r}")
 
 
+def bench_dequant_score(out=print):
+    """Fused dequantize-score (kernels/quant) vs its two rivals.
+
+    Three rows per geometry: the f32 matmul it replaces, the XLA
+    dequantize-then-matmul fallback (``method="dequant"``), and the fused
+    int32-accumulate path (``method="fused"`` — on CPU this times the XLA
+    emulation, the exact arithmetic twin of the Pallas kernel).  These
+    timings feed the ``FALLBACK_METHOD`` table in
+    ``kernels/quant/autotune.py``; the serving-geometry sweep that
+    ``method=None`` actually resolves from is the committed
+    ``BENCH_quant.json`` (``serving_traffic.py --quant``).
+
+    TODO(tpu): add a real-TPU row timing ``dequant_score_pallas`` itself
+    (compiled, not interpret) once this runs on hardware — same standing
+    item as the sddmm segment kernel; until then the structural VMEM
+    numbers below are the TPU-relevant output."""
+
+    from repro.kernels.quant import dequant_score
+    from repro.serve.quant import quantize_rows
+
+    for (B, n, r) in [(256, 2000, 32), (1024, 10000, 48)]:
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.normal(size=(B, r)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(n, r)), jnp.float32)
+        u_q, u_s = quantize_rows(u)
+        w_q, w_s = quantize_rows(w)
+        f32 = jax.jit(lambda a, b: a @ b.T)
+        deq = lambda a, b, c, d: dequant_score(a, b, c, d, method="dequant")
+        fus = lambda a, b, c, d: dequant_score(a, b, c, d, method="fused")
+        f32(u, w).block_until_ready()              # compile outside timing
+        deq(u_q, u_s, w_q, w_s).block_until_ready()
+        fus(u_q, u_s, w_q, w_s).block_until_ready()
+        us_f32 = _time(f32, u, w)
+        us_deq = _time(deq, u_q, u_s, w_q, w_s)
+        us_fus = _time(fus, u_q, u_s, w_q, w_s)
+        flops = 2 * B * n * r
+        # VMEM working set of the Pallas layout (kernel.py): resident int8
+        # user tile + streamed int8 item tile + scale rows + f32 out tile
+        bn, rp, bp = min(512, n), max(128, r), max(32, B)
+        vmem = (bp + bn) * rp + (bp + bn) * 4 + bp * bn * 4
+        out(f"dequant_score_{B}x{n}_r{r}_f32,{us_f32:.0f},"
+            f"gflops={flops/us_f32/1e3:.2f}")
+        out(f"dequant_score_{B}x{n}_r{r}_dequant,{us_deq:.0f},"
+            f"gflops={flops/us_deq/1e3:.2f};vs_f32={us_deq/us_f32:.2f}x")
+        out(f"dequant_score_{B}x{n}_r{r}_fused,{us_fus:.0f},"
+            f"gflops={flops/us_fus/1e3:.2f};vs_f32={us_fus/us_f32:.2f}x;"
+            f"vmem_kb={vmem//1024}")
+
+
 def bench_flash_attention(out=print):
     for (B, H, L, D) in [(1, 8, 1024, 128), (1, 8, 4096, 128)]:
         rng = np.random.default_rng(0)
@@ -60,6 +109,7 @@ def bench_flash_attention(out=print):
 
 def main(out=print):
     bench_masked_factor_grad(out)
+    bench_dequant_score(out)
     bench_flash_attention(out)
 
 

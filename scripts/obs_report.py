@@ -35,6 +35,12 @@ regime (``async_rounds`` true, or ``exchange_every > 1``) MUST carry the
 planned-staleness counters (``gossip_skipped_exchanges_total`` /
 ``gossip_stale_rounds_total``) — exit status 1 when they are absent, so
 the exact skip accounting (DESIGN.md §15) can't silently unplug.
+
+Quant tripwire: an envelope whose config declares ``quant`` MUST carry
+the ``serve_index_bytes{dtype=...}`` gauges (the memory-cut proof,
+DESIGN.md §16) and an ``overlap_at_k`` payload field (the accuracy
+gate's measurement) — exit status 1 when either is absent, so an int8
+serving bench can never land without its two load-bearing claims.
 """
 
 from __future__ import annotations
@@ -99,6 +105,7 @@ def main(argv=None) -> int:
 
     config = {}
     bench = None
+    envelope = data
     if "metrics" in data:                      # bench envelope
         bench = data.get("bench")
         print(f"bench={bench} backend={data.get('backend')} "
@@ -143,6 +150,17 @@ def main(argv=None) -> int:
                   f"for a {len(buckets)}-bucket ladder: something "
                   f"compiled at serve time (always-hot regression)",
                   file=sys.stderr)
+            return 1
+    if config.get("quant"):
+        gauges = data.get("gauges", {})
+        if not any(k.startswith("serve_index_bytes") for k in gauges):
+            print("quant bench envelope has no serve_index_bytes gauge: "
+                  "the int8 memory-cut claim is unverifiable",
+                  file=sys.stderr)
+            return 1
+        if "overlap_at_k" not in envelope:
+            print("quant bench envelope has no overlap_at_k field: the "
+                  "int8 accuracy gate is unverifiable", file=sys.stderr)
             return 1
     return 0
 

@@ -1,0 +1,23 @@
+"""Fused int8 dequantize-score kernel for the serving hot path.
+
+``ops.dequant_score`` is the public entry point; ``kernel.py`` holds the
+Pallas TPU kernel, ``ref.py`` the two XLA paths (exact fused emulation +
+dequantize-then-matmul reference), ``autotune.py`` the per-backend
+``method=None`` resolver fed by the committed ``BENCH_quant.json``
+sweep.  Quantization itself lives with the index (``serve/quant.py``);
+this package only scores.
+"""
+
+from repro.kernels.quant.autotune import (FALLBACK_METHOD, METHODS,
+                                          resolve_method)
+from repro.kernels.quant.ops import dequant_score
+from repro.kernels.quant.ref import dequant_score_ref, fused_score_xla
+
+__all__ = [
+    "FALLBACK_METHOD",
+    "METHODS",
+    "dequant_score",
+    "dequant_score_ref",
+    "fused_score_xla",
+    "resolve_method",
+]

@@ -1,0 +1,89 @@
+"""Per-backend dequant-score method selection (``method=None``).
+
+Same pattern as ``kernels/sddmm/autotune.py`` (the ``EngineOptions.chunk``
+resolver): an explicit ``method=`` always wins; ``None`` consults the
+**committed** sweep in ``benchmarks/BENCH_quant.json`` — the
+``--quant`` arm of ``benchmarks/serving_traffic.py`` times one scoring
+call per method at the bench geometry and records ``method_sweep_ms`` —
+for the running backend, and falls back to a hardcoded per-backend
+default when no committed sweep covers it.
+
+Fallback rationale (measured by ``benchmarks/kernels_bench.py``'s
+``dequant_score`` rows):
+
+* ``cpu`` — ``"dequant"``: XLA-CPU has no int8 GEMM; the int32-matmul
+  emulation of the fused path runs scalar while dequantize-then-matmul
+  rides the f32 BLAS kernel.
+* ``gpu``/``tpu`` — ``"fused"``: int8 tiles halve the factor traffic
+  and the MXU/tensor-core int8 path accumulates in int32 for free.
+  TODO(tpu): commit a real-TPU ``method_sweep_ms`` row (and a
+  ``kernels_bench.py`` timing of ``dequant_score_pallas`` itself) once
+  this runs on hardware — the carried-over ROADMAP item for the sddmm
+  segment kernel applies to this kernel too; until then the tpu entry
+  is the architectural expectation, not a measurement.
+
+The lookup reads one small JSON at most once per process and the
+resolved method is a trace-time static, exactly like a hand-passed one.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+METHODS = ("fused", "dequant")
+
+FALLBACK_METHOD = {"cpu": "dequant", "gpu": "fused", "tpu": "fused"}
+
+# repo-relative location of the committed sweep (absent in installed
+# trees — the fallback table then applies)
+_SWEEP_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    *([os.pardir] * 4), "benchmarks", "BENCH_quant.json",
+)
+
+
+def _sweep_table(path: str) -> dict[str, str]:
+    """backend -> fastest method from a committed --quant sweep."""
+
+    with open(path) as f:
+        data = json.load(f)
+    sweep = {m: float(ms) for m, ms in
+             (data.get("method_sweep_ms") or {}).items() if m in METHODS}
+    if not sweep:
+        return {}
+    return {data.get("backend", "cpu"): min(sweep, key=sweep.get)}
+
+
+@functools.lru_cache(maxsize=None)
+def _committed_sweep() -> dict[str, str]:
+    try:
+        return _sweep_table(_SWEEP_PATH)
+    except (OSError, ValueError, KeyError):
+        return {}
+
+
+def resolve_method(method: str | None, backend: str | None = None) -> str:
+    """The scoring method to compile with.
+
+    ``method`` not None → validated and returned unchanged.  Otherwise:
+    the committed sweep's winner for ``backend`` (default: the running
+    jax backend), else the hardcoded per-backend fallback, else
+    ``"dequant"`` (always correct everywhere)."""
+
+    if method is not None:
+        if method not in METHODS:
+            raise ValueError(
+                f"unknown dequant-score method {method!r}; "
+                f"expected one of {METHODS}"
+            )
+        return method
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    best = _committed_sweep().get(backend)
+    if best is not None:
+        return best
+    return FALLBACK_METHOD.get(backend, "dequant")

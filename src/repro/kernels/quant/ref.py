@@ -1,0 +1,50 @@
+"""XLA reference paths for the fused dequantize-score matmul.
+
+Two numerically distinct references (ops.py's ``method=`` switch):
+
+* :func:`dequant_score_ref` — the **dequant** path: materialize the f32
+  factors (``q · scale`` per row) and run the plain f32 scoring matmul.
+  This is the exact oracle for "what would serving the quantized factors
+  in f32 look like" and the default on backends without an MXU int8 path
+  (the committed autotune sweep picks it on CPU).
+* :func:`fused_score_xla` — the **fused** path's XLA emulation: one
+  int8×int8 → int32 matmul with the per-row scales folded into a rank-1
+  f32 epilogue.  This is token-for-token the arithmetic of the Pallas
+  kernel (``kernel.py``) — int32 accumulation, then
+  ``acc · u_scale_i · w_scale_j`` — so kernel-vs-XLA parity tests can
+  assert exact equality, not closeness.
+
+The two differ only in float rounding: the fused epilogue keeps the
+integer dot exact (|q| ≤ 127, so the int32 sum is exact in f32 for any
+rank below 2²⁴/127² ≈ 1040) while the dequant path rounds every
+``q · scale`` product to f32 before accumulating.  Both stay within the
+quantization error bound; top-k overlap is gated in
+``tests/test_quant_serving.py`` either way.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_score_ref(u_q, u_scale, w_q, w_scale):
+    """(B, n) f32 scores via explicit dequantize-then-matmul."""
+
+    u = u_q.astype(jnp.float32) * u_scale[:, None]
+    w = w_q.astype(jnp.float32) * w_scale[:, None]
+    return u @ w.T
+
+
+def fused_score_xla(u_q, u_scale, w_q, w_scale):
+    """(B, n) f32 scores: int32 matmul + per-row scale epilogue.
+
+    Bit-identical to the Pallas kernel's arithmetic — the kernel's XLA
+    fallback on backends (or shapes) where the Pallas path is not
+    profitable."""
+
+    acc = jax.lax.dot_general(
+        u_q, w_q, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                               # (B, n) int32, exact
+    return acc.astype(jnp.float32) * u_scale[:, None] * w_scale[None, :]

@@ -110,24 +110,28 @@ class FitResult:
         )
 
     def to_service(self, batch: int = 256, k: int = 10,
-                   exclude_seen: bool = True, plan=None) -> RecommendService:
+                   exclude_seen: bool = True, plan=None,
+                   quant=None, quant_method=None) -> RecommendService:
         """Fixed-batch top-k serving front end over the trained factors.
 
         ``plan`` (a ``repro.mesh.MeshPlan``; defaults to the problem's own
         plan when it spans multiple devices) shards the catalog's item
         axis over the plan's devices with the two-stage top-k query —
-        serving for catalogs larger than one device."""
+        serving for catalogs larger than one device.  ``quant="int8"``
+        serves the int8 factor cache (DESIGN.md §16); ``quant_method``
+        picks its scoring path."""
 
         if plan is None:
             pp = getattr(self.problem, "plan", None)
             if pp is not None and not pp.is_single_device:
                 plan = pp
         return RecommendService(self.to_recommend_index(), batch=batch, k=k,
-                                exclude_seen=exclude_seen, plan=plan)
+                                exclude_seen=exclude_seen, plan=plan,
+                                quant=quant, quant_method=quant_method)
 
     def to_engine(self, buckets=None, k: int = 10, exclude_seen: bool = True,
                   plan=None, refresh_policy=None, trainer=None,
-                  seen_headroom: int = 64):
+                  seen_headroom: int = 64, quant=None, quant_method=None):
         """AOT bucket-batched serving engine over the trained factors
         (``repro.serving.ServingEngine``, DESIGN.md §14) — every bucket
         compiled eagerly here, so the first request is already hot.
@@ -135,7 +139,9 @@ class FitResult:
         ``plan`` defaults like :meth:`to_service`; pass ``trainer`` (plus
         a ``refresh_policy``) and the engine is bound for policy-driven
         auto-refit: ``engine.note_append(n, problem)`` runs
-        ``trainer.refit`` and hot-swaps the factors once the policy trips."""
+        ``trainer.refit`` and hot-swaps the factors once the policy trips.
+        ``quant="int8"`` lowers every bucket executable against the int8
+        factor cache (DESIGN.md §16)."""
 
         from repro.serving import DEFAULT_BUCKETS, ServingEngine
 
@@ -148,6 +154,7 @@ class FitResult:
             buckets=buckets if buckets is not None else DEFAULT_BUCKETS,
             k=k, exclude_seen=exclude_seen, plan=plan,
             seen_headroom=seen_headroom, refresh_policy=refresh_policy,
+            quant=quant, quant_method=quant_method,
         )
         engine._fit_result = self
         if trainer is not None:

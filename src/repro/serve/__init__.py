@@ -7,6 +7,12 @@ package and ``repro.serving`` (the AOT bucket-batched engine) are
 unambiguously the paper workload's serving namespaces.
 """
 
+from repro.serve.quant import (
+    QuantizedRecommendIndex,
+    index_nbytes,
+    quantize_index,
+    quantize_rows,
+)
 from repro.serve.recommend import (
     RecommendIndex,
     RecommendService,
@@ -21,12 +27,16 @@ from repro.serve.recommend import (
 )
 
 __all__ = [
+    "QuantizedRecommendIndex",
     "RecommendIndex",
     "RecommendService",
     "ShardedRecommendIndex",
     "build_index",
     "build_seen_table",
     "build_seen_table_coo",
+    "index_nbytes",
+    "quantize_index",
+    "quantize_rows",
     "recommend_topk",
     "recommend_topk_sharded",
     "score_pairs",

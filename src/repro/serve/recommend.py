@@ -24,7 +24,17 @@ S·k candidates are all-gathered and merged by one final k-selection.  The
 merge is exact (the global top-k is always a subset of the per-shard
 top-k's), pinned against the numpy oracle in ``tests/test_mesh_plan.py``.
 
-Throughput bench: ``benchmarks/serve_recommend.py`` (``--sharded``).
+**int8 serving** (DESIGN.md §16): every query in this module also takes a
+``QuantizedRecommendIndex`` (serve/quant.py — int8 codes + per-row f32
+scales); scoring then routes through the fused dequantize-score kernel
+switch (``kernels/quant``, ``method="fused"|"dequant"``, ``None`` =
+per-backend autotune).  Per-row scales make per-shard quantization exact,
+so ``shard_index`` shards the int8 catalog the same way and the two-stage
+query serves int8 unchanged.  Accuracy is gated in
+``tests/test_quant_serving.py`` (overlap@k ≥ 0.99 vs f32).
+
+Throughput bench: ``benchmarks/serve_recommend.py`` (``--sharded``);
+``benchmarks/serving_traffic.py --quant`` for the int8 engine arm.
 """
 
 from __future__ import annotations
@@ -44,6 +54,8 @@ from repro import obs
 from repro.compat import shard_map
 from repro.core.assemble import assemble
 from repro.core.grid import GridSpec
+from repro.kernels.quant import dequant_score
+from repro.serve.quant import QuantizedRecommendIndex, quantize_index
 
 _SEEN_PAD_QUANTUM = 16
 
@@ -54,6 +66,18 @@ class RecommendIndex(NamedTuple):
     u: jax.Array      # (m, r) float32 — user factors
     w: jax.Array      # (n, r) float32 — item factors
     seen: jax.Array   # (m, S) int32 — items to exclude; pad value == n
+
+    @property
+    def num_users(self) -> int:
+        return self.u.shape[0]
+
+    @property
+    def num_items(self) -> int:
+        return self.w.shape[0]
+
+    @property
+    def rank(self) -> int:
+        return self.u.shape[1]
 
     def refresh(self, fit_result) -> "RecommendIndex":
         """Rebuild from a (re)fit without a serving restart — the read
@@ -143,18 +167,35 @@ def build_index(
     return RecommendIndex(u, w, jnp.asarray(seen))
 
 
-@partial(jax.jit, static_argnames=("k", "exclude_seen"))
-def recommend_topk(
-    index: RecommendIndex, user_ids: jax.Array, *,
-    k: int, exclude_seen: bool = True,
-) -> tuple[jax.Array, jax.Array]:
-    """(items, scores) of shape (B, k) for a batch of user ids."""
+def _batch_scores(index, user_ids, method):
+    """(B, n) scores for either index layout — the one scoring switch."""
 
-    if k > index.w.shape[0]:
-        raise ValueError(
-            f"k={k} exceeds catalog size n={index.w.shape[0]}"
+    if isinstance(index, QuantizedRecommendIndex):
+        return dequant_score(
+            index.u_q[user_ids], index.u_scale[user_ids],
+            index.w_q, index.w_scale, method=method,
         )
-    scores = index.u[user_ids] @ index.w.T                  # (B, n)
+    return index.u[user_ids] @ index.w.T
+
+
+@partial(jax.jit, static_argnames=("k", "exclude_seen", "method"))
+def recommend_topk(
+    index, user_ids: jax.Array, *,
+    k: int, exclude_seen: bool = True, method: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(items, scores) of shape (B, k) for a batch of user ids.
+
+    ``index`` is a ``RecommendIndex`` or its int8 twin
+    (``QuantizedRecommendIndex``); ``method`` picks the quantized
+    scoring path (``"fused"``/``"dequant"``, ``None`` = per-backend
+    autotune — ``kernels/quant``) and is ignored for f32 indices."""
+
+    n_items = index.num_items
+    if k > n_items:
+        raise ValueError(
+            f"k={k} exceeds catalog size n={n_items}"
+        )
+    scores = _batch_scores(index, user_ids, method)         # (B, n)
     if exclude_seen:
         b = user_ids.shape[0]
         seen = index.seen[user_ids]                         # (B, S)
@@ -166,9 +207,15 @@ def recommend_topk(
 
 
 @jax.jit
-def score_pairs(index: RecommendIndex, user_ids, item_ids):
+def score_pairs(index, user_ids, item_ids):
     """Pointwise predicted ratings for explicit (user, item) pairs."""
 
+    if isinstance(index, QuantizedRecommendIndex):
+        dots = jnp.sum(
+            index.u_q[user_ids].astype(jnp.int32)
+            * index.w_q[item_ids].astype(jnp.int32), axis=-1,
+        ).astype(jnp.float32)
+        return dots * index.u_scale[user_ids] * index.w_scale[item_ids]
     return jnp.sum(index.u[user_ids] * index.w[item_ids], axis=-1)
 
 
@@ -181,16 +228,25 @@ def score_pairs(index: RecommendIndex, user_ids, item_ids):
 class ShardedRecommendIndex:
     """A ``RecommendIndex`` whose item axis lives across the mesh.
 
-    ``index.w`` is padded to a multiple of the plan's device count and
-    device_put with ``plan.item_spec`` — every device holds exactly
+    The item factors are padded to a multiple of the plan's device count
+    and device_put with ``plan.item_spec`` — every device holds exactly
     ``shard_items`` item factors, so catalogs scale past one device's
     memory.  ``u``/``seen`` stay replicated (user batches are small;
     queries gather by user id).  ``num_items`` is the true catalog size;
-    padding rows are masked inside the sharded query."""
+    padding rows are masked inside the sharded query.
 
-    index: RecommendIndex
+    ``index`` may be the int8 twin (``QuantizedRecommendIndex``): the
+    codes shard like W, the per-item scale vector shards alongside them
+    (per-row scales make the per-shard quantization exactly the global
+    one), and the two-stage query scores through ``kernels/quant``."""
+
+    index: object                # RecommendIndex | QuantizedRecommendIndex
     plan: object                 # repro.mesh.MeshPlan
     num_items: int
+
+    @property
+    def quantized(self) -> bool:
+        return isinstance(self.index, QuantizedRecommendIndex)
 
     @property
     def num_item_shards(self) -> int:
@@ -200,10 +256,12 @@ class ShardedRecommendIndex:
     def shard_items(self) -> int:
         """Items held per device (padded width / shard count)."""
 
-        return self.index.w.shape[0] // self.plan.num_item_shards
+        return self.index.num_items // self.plan.num_item_shards
 
     def refresh(self, fit_result) -> "ShardedRecommendIndex":
-        """Hot-swap after a (re)fit, keeping the shard layout.
+        """Hot-swap after a (re)fit, keeping the shard layout (and the
+        quantized layout: an int8 sharded index re-quantizes the fresh
+        factors per shard on the swap).
 
         Guards the sharded contract on top of the factor-shape guard: the
         refreshed fit must produce the same item-shard geometry this index
@@ -224,55 +282,97 @@ class ShardedRecommendIndex:
             )
         new = fit_result.to_recommend_index()
         old = _unpad_index(self)
-        if new.u.shape != old.u.shape or new.w.shape != old.w.shape:
+        expected = (_u_shape(old), _w_shape(old))
+        got = (tuple(new.u.shape), tuple(new.w.shape))
+        if expected != got:
             raise ValueError(
                 f"refresh changes the factor shapes: expected "
-                f"u{tuple(old.u.shape)} x w{tuple(old.w.shape)}, got "
-                f"u{tuple(new.u.shape)} x w{tuple(new.w.shape)}; a "
-                f"re-shaped problem needs a new shard_index, not a refresh"
+                f"u{expected[0]} x w{expected[1]}"
+                f"{' (int8 layout)' if self.quantized else ''}, got "
+                f"u{got[0]} x w{got[1]}; a re-shaped problem needs a new "
+                f"shard_index, not a refresh"
             )
+        if self.quantized:
+            new = quantize_index(new)
         return shard_index(new, self.plan)
 
 
-def _unpad_index(sidx: ShardedRecommendIndex) -> RecommendIndex:
-    return RecommendIndex(sidx.index.u, sidx.index.w[: sidx.num_items],
-                          sidx.index.seen)
+def _u_shape(index) -> tuple:
+    return tuple((index.u_q if isinstance(index, QuantizedRecommendIndex)
+                  else index.u).shape)
 
 
-def shard_index(index: RecommendIndex, plan) -> ShardedRecommendIndex:
+def _w_shape(index) -> tuple:
+    return tuple((index.w_q if isinstance(index, QuantizedRecommendIndex)
+                  else index.w).shape)
+
+
+def _unpad_index(sidx: ShardedRecommendIndex):
+    idx = sidx.index
+    if isinstance(idx, QuantizedRecommendIndex):
+        return idx._replace(w_q=idx.w_q[: sidx.num_items],
+                            w_scale=idx.w_scale[: sidx.num_items])
+    return RecommendIndex(idx.u, idx.w[: sidx.num_items], idx.seen)
+
+
+def _pad_items(a, n_pad: int):
+    """Zero-pad an item-axis array (codes, factors or scales) to the
+    shard multiple; padded rows are masked at query time."""
+
+    pad = n_pad - a.shape[0]
+    if not pad:
+        return a
+    widths = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
+    return jnp.pad(a, widths)
+
+
+def shard_index(index, plan) -> ShardedRecommendIndex:
     """Partition an index's item axis over every device of ``plan``.
 
-    W is zero-padded to a shard multiple (padding masked at query time)
-    and placed with ``plan.item_spec``; u and the seen table replicate.
-    A 1-device plan degrades to the unsharded layout (and the two-stage
+    The item factors are zero-padded to a shard multiple (padding masked
+    at query time) and placed with ``plan.item_spec``; u and the seen
+    table replicate.  A quantized index shards exactly the same way —
+    codes and the per-item scale row both live on the item axis.  A
+    1-device plan degrades to the unsharded layout (and the two-stage
     query to a plain ``recommend_topk`` — parity-tested)."""
 
     S = plan.num_item_shards
-    n, r = index.w.shape
+    n = index.num_items
     n_pad = -(-n // S) * S
-    w = index.w
-    if n_pad != n:
-        w = jnp.concatenate(
-            [w, jnp.zeros((n_pad - n, r), w.dtype)], axis=0
-        )
-    w = jax.device_put(w, plan.sharding(plan.item_spec))
+    item_sh = plan.sharding(plan.item_spec)
     rep = plan.sharding(P())
-    u = jax.device_put(index.u, rep)
-    seen = jax.device_put(index.seen, rep)
-    return ShardedRecommendIndex(RecommendIndex(u, w, seen), plan, n)
+    if isinstance(index, QuantizedRecommendIndex):
+        placed = QuantizedRecommendIndex(
+            jax.device_put(index.u_q, rep),
+            jax.device_put(index.u_scale, rep),
+            jax.device_put(_pad_items(index.w_q, n_pad), item_sh),
+            jax.device_put(_pad_items(index.w_scale, n_pad), item_sh),
+            jax.device_put(index.seen, rep),
+        )
+    else:
+        placed = RecommendIndex(
+            jax.device_put(index.u, rep),
+            jax.device_put(_pad_items(index.w, n_pad), item_sh),
+            jax.device_put(index.seen, rep),
+        )
+    return ShardedRecommendIndex(placed, plan, n)
 
 
 @functools.lru_cache(maxsize=None)
 def _make_sharded_topk(plan, k: int, exclude_seen: bool, num_items: int,
-                       shard_items: int):
-    """Compiled two-stage query for one (plan, k) shape."""
+                       shard_items: int, quant: bool = False,
+                       method: str | None = None):
+    """Compiled two-stage query for one (plan, k, layout) shape.
+
+    ``quant=True`` compiles the int8 body: per-shard codes + per-item
+    scales score through the ``kernels/quant`` switch (``method`` is the
+    resolved trace-time scoring method); the mask/top-k/merge stages are
+    identical to the f32 body."""
 
     axes = plan.all_axes
     ax = axes if len(axes) > 1 else axes[0]
 
-    def body(u, w_local, seen, user_ids):
-        start = jax.lax.axis_index(ax) * shard_items
-        scores = u[user_ids] @ w_local.T                     # (B, ln)
+    def select_merge(scores, start, seen, user_ids):
         local_ids = start + jnp.arange(shard_items)
         scores = jnp.where(local_ids[None, :] < num_items, scores, -jnp.inf)
         if exclude_seen:
@@ -292,9 +392,27 @@ def _make_sharded_topk(plan, k: int, exclude_seen: bool, num_items: int,
         mids = jnp.take_along_axis(all_ids, mix, axis=1)
         return mids, msc
 
+    if quant:
+        def body(u_q, u_s, wq_local, ws_local, seen, user_ids):
+            start = jax.lax.axis_index(ax) * shard_items
+            scores = dequant_score(                          # (B, ln)
+                u_q[user_ids], u_s[user_ids], wq_local, ws_local,
+                method=method,
+            )
+            return select_merge(scores, start, seen, user_ids)
+
+        in_specs = (P(), P(), plan.item_spec, plan.item_spec, P(), P())
+    else:
+        def body(u, w_local, seen, user_ids):
+            start = jax.lax.axis_index(ax) * shard_items
+            scores = u[user_ids] @ w_local.T                 # (B, ln)
+            return select_merge(scores, start, seen, user_ids)
+
+        in_specs = (P(), plan.item_spec, P(), P())
+
     return jax.jit(shard_map(
         body, mesh=plan.mesh,
-        in_specs=(P(), plan.item_spec, P(), P()),
+        in_specs=in_specs,
         out_specs=(P(), P()),
         check_vma=False,
     ))
@@ -302,21 +420,33 @@ def _make_sharded_topk(plan, k: int, exclude_seen: bool, num_items: int,
 
 def recommend_topk_sharded(
     sidx: ShardedRecommendIndex, user_ids: jax.Array, *,
-    k: int, exclude_seen: bool = True,
+    k: int, exclude_seen: bool = True, method: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(items, scores) of shape (B, k) from the sharded index.
 
-    Stage 1 runs on every item shard in parallel (local matmul, local
+    Stage 1 runs on every item shard in parallel (local matmul — or the
+    fused dequantize-score switch for an int8-sharded index — local
     seen-mask, local top-k over n/S items); stage 2 all-gathers the S·k
     candidates and k-selects once.  Exact: any global top-k item is by
-    definition in its own shard's top-k."""
+    definition in its own shard's top-k.  ``method`` picks the quantized
+    scoring path and is ignored for f32 indices."""
 
     if k > sidx.shard_items:
         raise ValueError(
             f"k={k} exceeds the per-shard catalog slice "
-            f"{sidx.shard_items} (= {sidx.index.w.shape[0]} padded items / "
-            f"{sidx.num_item_shards} shards); shrink k or use fewer shards"
+            f"{sidx.shard_items} (= {_w_shape(sidx.index)[0]} padded items "
+            f"/ {sidx.num_item_shards} shards); shrink k or use fewer shards"
         )
+    if sidx.quantized:
+        # resolve here so the lru key (and the compiled body) is the
+        # concrete method, never two entries for None-vs-resolved
+        from repro.kernels.quant import resolve_method
+
+        fn = _make_sharded_topk(sidx.plan, k, exclude_seen, sidx.num_items,
+                                sidx.shard_items, quant=True,
+                                method=resolve_method(method))
+        i = sidx.index
+        return fn(i.u_q, i.u_scale, i.w_q, i.w_scale, i.seen, user_ids)
     fn = _make_sharded_topk(sidx.plan, k, exclude_seen, sidx.num_items,
                             sidx.shard_items)
     return fn(sidx.index.u, sidx.index.w, sidx.index.seen, user_ids)
@@ -334,6 +464,12 @@ class RecommendService:
     unsharded copy would pin the full n×r factor matrix on one device,
     which is exactly what ``plan=`` exists to avoid.
 
+    Pass ``quant="int8"`` and the index is quantized to the int8 serving
+    layout (serve/quant.py) before placement — composes with ``plan=``
+    (per-shard int8), and ``refresh`` re-quantizes on every hot swap.
+    ``quant_method`` picks the scoring path (``"fused"``/``"dequant"``,
+    ``None`` = per-backend autotune).
+
     Every ``recommend`` call streams into the ``repro.obs`` registry:
     ``serve_batch_seconds`` (queue-to-answer latency per jitted batch —
     the host-side ``np.asarray`` copy already syncs the device, so the
@@ -347,12 +483,23 @@ class RecommendService:
     compile time.  ``metrics()`` summarizes all of it into p50/p99
     latency and QPS (DESIGN.md §12)."""
 
-    def __init__(self, index: RecommendIndex, batch: int = 256, k: int = 10,
-                 exclude_seen: bool = True, plan=None):
+    def __init__(self, index, batch: int = 256, k: int = 10,
+                 exclude_seen: bool = True, plan=None,
+                 quant: str | None = None, quant_method: str | None = None):
+        if quant not in (None, "int8"):
+            raise ValueError(
+                f"unknown quant mode {quant!r}; expected None or 'int8'"
+            )
+        if isinstance(index, QuantizedRecommendIndex):
+            quant = "int8"        # already-quantized input implies the mode
+        elif quant == "int8":
+            index = quantize_index(index)
         self.batch = batch
         self.k = k
         self.exclude_seen = exclude_seen
         self.plan = plan
+        self.quant = quant
+        self.quant_method = quant_method
         if plan is not None:
             self._sharded = shard_index(index, plan)
             self.index = None     # catalog lives only as device shards
@@ -373,14 +520,14 @@ class RecommendService:
     @property
     def num_users(self) -> int:
         if self._sharded is not None:
-            return self._sharded.index.u.shape[0]
-        return self.index.u.shape[0]
+            return self._sharded.index.num_users
+        return self.index.num_users
 
     @property
     def num_items(self) -> int:
         if self._sharded is not None:
             return self._sharded.num_items
-        return self.index.w.shape[0]
+        return self.index.num_items
 
     @property
     def num_item_shards(self) -> int:
@@ -433,11 +580,13 @@ class RecommendService:
                 items, scores = recommend_topk_sharded(
                     sharded, jnp.asarray(chunk),
                     k=self.k, exclude_seen=self.exclude_seen,
+                    method=self.quant_method,
                 )
             else:
                 items, scores = recommend_topk(
                     index, jnp.asarray(chunk),
                     k=self.k, exclude_seen=self.exclude_seen,
+                    method=self.quant_method,
                 )
             take = min(self.batch, n - s)
             # the host copies force the device sync, so the stamp below

@@ -12,7 +12,10 @@ and compiles every bucket's executable **eagerly at startup** via
 * sharded (a ``MeshPlan`` given): the executable is the compiled
   two-stage ``shard_map`` query from ``serve.recommend``'s
   ``_make_sharded_topk`` — the item axis lives across the plan's devices
-  and the merge is exact (DESIGN.md §5).
+  and the merge is exact (DESIGN.md §5);
+* int8 (a ``QuantizedRecommendIndex``, DESIGN.md §16): the very same two
+  paths lowered against the quantized layout — the fused dequantize-score
+  switch is baked into each bucket's HLO, still zero serve-time compiles.
 
 Factor buffers are *arguments* of the executables, not captured
 constants: ``ServingEngine.refresh`` swaps in new (u, w, seen) arrays of
@@ -32,26 +35,35 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import obs
-from repro.serve.recommend import (RecommendIndex, _make_sharded_topk,
-                                   recommend_topk)
+from repro.serve.quant import QuantizedRecommendIndex
+from repro.serve.recommend import _make_sharded_topk, recommend_topk
 from repro.serving.buckets import BucketLadder
 
 
 def compile_buckets(
-    index: RecommendIndex,
+    index,
     ladder: BucketLadder,
     k: int,
     exclude_seen: bool,
     plan=None,
     sharded_index=None,
+    method=None,
 ) -> Dict[int, Callable]:
     """Eagerly compile one executable per bucket; returns {bucket: run}.
 
     Each ``run(index_like, user_ids)`` takes the *current* factor buffers
-    — a ``RecommendIndex`` (unsharded) or a ``ShardedRecommendIndex``
-    (``plan`` given, built by the caller via ``shard_index``) — plus a
-    padded (bucket,)-shaped int32 user array, and returns (items, scores)
-    of shape (bucket, k).  Compilation happens here, at call time never.
+    — a ``RecommendIndex`` or its int8 twin (unsharded), or a
+    ``ShardedRecommendIndex`` (``plan`` given, built by the caller via
+    ``shard_index``) — plus a padded (bucket,)-shaped int32 user array,
+    and returns (items, scores) of shape (bucket, k).  Compilation
+    happens here, at call time never.
+
+    A quantized ``index`` lowers each bucket executable against the int8
+    layout (the traced pytree IS the quantized NamedTuple, so the int8
+    scoring switch is baked into the HLO); ``method`` is the resolved
+    quantized scoring method and must already be concrete for quantized
+    sharded lowering (``None`` is fine for f32 layouts, where it is a
+    trace-time no-op).
     """
 
     if plan is not None and sharded_index is None:
@@ -61,23 +73,35 @@ def compile_buckets(
         users = jnp.zeros((bucket,), jnp.int32)
         if plan is None:
             ex = recommend_topk.lower(
-                index, users, k=k, exclude_seen=exclude_seen
+                index, users, k=k, exclude_seen=exclude_seen, method=method
             ).compile()
 
             def run(idx, user_ids, _ex=ex):
                 return _ex(idx, user_ids)
         else:
             rep = plan.sharding(P())
+            quant = isinstance(sharded_index.index, QuantizedRecommendIndex)
             fn = _make_sharded_topk(plan, k, exclude_seen,
                                     sharded_index.num_items,
-                                    sharded_index.shard_items)
+                                    sharded_index.shard_items,
+                                    quant=quant, method=method)
             sidx = sharded_index.index
-            ex = fn.lower(sidx.u, sidx.w, sidx.seen,
-                          jax.device_put(users, rep)).compile()
+            if quant:
+                ex = fn.lower(sidx.u_q, sidx.u_scale, sidx.w_q, sidx.w_scale,
+                              sidx.seen, jax.device_put(users, rep)).compile()
 
-            def run(sidx, user_ids, _ex=ex, _rep=rep):
-                i = sidx.index
-                return _ex(i.u, i.w, i.seen, jax.device_put(user_ids, _rep))
+                def run(sidx, user_ids, _ex=ex, _rep=rep):
+                    i = sidx.index
+                    return _ex(i.u_q, i.u_scale, i.w_q, i.w_scale, i.seen,
+                               jax.device_put(user_ids, _rep))
+            else:
+                ex = fn.lower(sidx.u, sidx.w, sidx.seen,
+                              jax.device_put(users, rep)).compile()
+
+                def run(sidx, user_ids, _ex=ex, _rep=rep):
+                    i = sidx.index
+                    return _ex(i.u, i.w, i.seen,
+                               jax.device_put(user_ids, _rep))
         executables[bucket] = run
         obs.counter("serve_compiles_total").inc()
         obs.counter("serve_bucket_compiles_total", bucket=str(bucket)).inc()

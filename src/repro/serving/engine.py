@@ -36,7 +36,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.serve.recommend import RecommendIndex, shard_index
+from repro.kernels.quant import resolve_method
+from repro.serve.quant import (QuantizedRecommendIndex, index_nbytes,
+                               quantize_index)
+from repro.serve.recommend import (RecommendIndex, _u_shape, _w_shape,
+                                   shard_index)
 from repro.serving.buckets import DEFAULT_BUCKETS, BucketLadder
 from repro.serving.compiler import compile_buckets
 from repro.serving.queue import Request, ServeWorker
@@ -101,11 +105,20 @@ class ServingEngine:
     over the plan's devices exactly like ``RecommendService(plan=...)``;
     the unsharded index is not retained.  ``seen_headroom`` reserves extra
     seen-table columns so post-append refreshes (whose tables are wider)
-    still fit the frozen executable shapes."""
+    still fit the frozen executable shapes.
+
+    ``quant="int8"`` serves the int8 factor cache (DESIGN.md §16): the
+    index is quantized (symmetric per-row, serve/quant.py) before the
+    bucket executables lower, so every AOT program scores through the
+    fused dequantize-score switch — composes with ``plan=`` (per-shard
+    int8) and with ``refresh`` (re-quantize on every hot swap).
+    ``quant_method`` picks the scoring path (``"fused"``/``"dequant"``;
+    ``None`` resolves per backend once, at startup, so all buckets and
+    every later refresh serve one concrete method)."""
 
     def __init__(
         self,
-        index: RecommendIndex,
+        index,
         *,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         k: int = 10,
@@ -113,6 +126,8 @@ class ServingEngine:
         plan=None,
         seen_headroom: int = 64,
         refresh_policy: Optional[RefreshPolicy] = None,
+        quant: Optional[str] = None,
+        quant_method: Optional[str] = None,
     ):
         self.ladder = (buckets if isinstance(buckets, BucketLadder)
                        else BucketLadder(tuple(buckets)))
@@ -120,8 +135,20 @@ class ServingEngine:
         self.exclude_seen = exclude_seen
         self.plan = plan
         self.refresh_policy = refresh_policy
-        self.num_users = int(index.u.shape[0])
-        self.num_items = int(index.w.shape[0])
+        if quant not in (None, "int8"):
+            raise ValueError(
+                f"unknown quant mode {quant!r}; expected None or 'int8'"
+            )
+        if isinstance(index, QuantizedRecommendIndex):
+            quant = "int8"        # already-quantized input implies the mode
+        elif quant == "int8":
+            index = quantize_index(index)
+        self.quant = quant
+        # resolve once: all bucket executables (and the jit path a parity
+        # test compares against) share one concrete scoring method
+        self.quant_method = resolve_method(quant_method) if quant else None
+        self.num_users = int(index.num_users)
+        self.num_items = int(index.num_items)
         if seen_headroom < 0:
             raise ValueError(f"seen_headroom must be >= 0, "
                              f"got {seen_headroom}")
@@ -129,6 +156,8 @@ class ServingEngine:
         index = index._replace(
             seen=_pad_seen(index.seen, self.seen_capacity, self.num_items)
         )
+        obs.gauge("serve_index_bytes",
+                  dtype="int8" if quant else "f32").set(index_nbytes(index))
         if plan is not None:
             self._bufs = shard_index(index, plan)
             sharded = self._bufs
@@ -137,7 +166,7 @@ class ServingEngine:
             sharded = None
         self._execs = compile_buckets(
             index, self.ladder, k, exclude_seen,
-            plan=plan, sharded_index=sharded,
+            plan=plan, sharded_index=sharded, method=self.quant_method,
         )
         # auto-refit state (RefreshPolicy / note_append)
         self._trainer = None
@@ -224,27 +253,51 @@ class ServingEngine:
         """Hot-swap the factor buffers from a refit (or a bare index).
 
         Accepts a ``FitResult`` (anything with ``to_recommend_index``) or
-        a ``RecommendIndex``.  The new factors must keep the engine's
+        a bare index.  The new factors must keep the engine's
         (m, r) × (n, r) shapes and the new seen table must fit the fixed
         ``seen_capacity`` — then the swap is one atomic attribute store
-        and every compiled executable keeps running untouched."""
+        and every compiled executable keeps running untouched.
+
+        On an int8 engine a fresh f32 fit **re-quantizes on the swap**
+        (the documented hot path: new factors in, new codes + scales out,
+        executables untouched).  The reverse never flies: the layouts may
+        not mix, and handing a quantized index to an f32 engine (or vice
+        versa an f32-only engine a quantized one) raises instead of
+        silently serving through executables compiled for the other
+        layout."""
 
         if hasattr(result, "to_recommend_index"):
             new = result.to_recommend_index()
         else:
             new = result
+        if self.quant is None and isinstance(new, QuantizedRecommendIndex):
+            raise ValueError(
+                "refresh would mix factor layouts: this engine's bucket "
+                "executables are compiled against the f32 layout, but the "
+                "swap-in is a QuantizedRecommendIndex (int8); serve int8 "
+                "through ServingEngine(quant='int8') — a refresh cannot "
+                "change the compiled layout"
+            )
+        if self.quant == "int8":
+            # f32 fit → fresh codes + scales; already-int8 → unchanged
+            new = quantize_index(new)
         with self._refresh_lock:
             old_u, old_w = self._factor_shapes()
-            if tuple(new.u.shape) != old_u or tuple(new.w.shape) != old_w:
+            got_u, got_w = _u_shape(new), _w_shape(new)
+            if got_u != old_u or got_w != old_w:
                 raise ValueError(
                     f"refresh changes the factor shapes: expected "
-                    f"u{old_u} x w{old_w}, got u{tuple(new.u.shape)} x "
-                    f"w{tuple(new.w.shape)}; a re-shaped problem needs a "
+                    f"u{old_u} x w{old_w}"
+                    f"{' (int8 layout)' if self.quant else ''}, got "
+                    f"u{got_u} x w{got_w}; a re-shaped problem needs a "
                     f"new ServingEngine, not a refresh"
                 )
             new = new._replace(
                 seen=_pad_seen(new.seen, self.seen_capacity, self.num_items)
             )
+            obs.gauge("serve_index_bytes",
+                      dtype="int8" if self.quant else "f32").set(
+                          index_nbytes(new))
             if self.plan is not None:
                 self._bufs = shard_index(new, self.plan)
             else:
@@ -258,10 +311,11 @@ class ServingEngine:
         return self
 
     def _factor_shapes(self):
-        if self.plan is not None:
-            return ((self.num_users, self._bufs.index.u.shape[1]),
-                    (self.num_items, self._bufs.index.w.shape[1]))
-        return tuple(self._bufs.u.shape), tuple(self._bufs.w.shape)
+        idx = self._bufs.index if self.plan is not None else self._bufs
+        u_shape, w_shape = _u_shape(idx), _w_shape(idx)
+        # sharded buffers carry shard padding on the item axis; the
+        # refresh contract is against the true catalog size
+        return u_shape, (self.num_items, w_shape[1])
 
     def bind(self, trainer, result) -> "ServingEngine":
         """Attach the training side for policy-driven auto-refit:
